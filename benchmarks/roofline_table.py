@@ -1,0 +1,53 @@
+"""§Roofline table: read the dry-run artifact (dryrun_results.jsonl) and
+print per-(arch x shape x mesh) roofline terms + bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.jsonl")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def roofline_table() -> Tuple[List[Dict], str]:
+    rows = load()
+    ok = [r for r in rows if "error" not in r and "skipped" not in r]
+    err = [r for r in rows if "error" in r]
+    skipped = [r for r in rows if "skipped" in r]
+    out = []
+    for r in ok:
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            t_compute_ms=round(r["t_compute"] * 1e3, 3),
+            t_memory_ms=round(r["t_memory"] * 1e3, 3),
+            t_collective_ms=round(r["t_collective"] * 1e3, 3),
+            bottleneck=r["bottleneck"],
+            useful_flop_frac=round(r["useful_flop_frac"], 3),
+            roofline_frac=round(r["roofline_frac"], 4)))
+    return out, (f"{len(ok)} cells ok, {len(err)} errors, "
+                 f"{len(skipped)} skipped")
+
+
+def print_table():
+    rows, summary = roofline_table()
+    hdr = ("arch", "shape", "mesh", "t_comp(ms)", "t_mem(ms)", "t_coll(ms)",
+           "bound", "useful", "roofline")
+    print(("{:<22}{:<13}{:<9}{:>11}{:>11}{:>11}{:>12}{:>8}{:>9}"
+           ).format(*hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(("{arch:<22}{shape:<13}{mesh:<9}{t_compute_ms:>11}"
+               "{t_memory_ms:>11}{t_collective_ms:>11}{bottleneck:>12}"
+               "{useful_flop_frac:>8}{roofline_frac:>9}").format(**r))
+    print(summary)
+
+
+if __name__ == "__main__":
+    print_table()

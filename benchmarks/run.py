@@ -1,0 +1,41 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--json out.json]
+
+Prints ``name,us_per_call,derived`` CSV (timing = one full evaluation of the
+table), then the roofline table from the dry-run artifact if present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", default=None)
+    a = p.parse_args()
+
+    from benchmarks import paper, roofline_table
+
+    all_rows = {}
+    print("name,us_per_call,derived")
+    fns = list(paper.ALL) + [roofline_table.roofline_table]
+    for fn in fns:
+        t0 = time.monotonic()
+        rows, derived = fn()
+        dt_us = (time.monotonic() - t0) * 1e6
+        all_rows[fn.__name__] = rows
+        print(f"{fn.__name__},{dt_us:.0f},\"{derived}\"")
+
+    print()
+    roofline_table.print_table()
+
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

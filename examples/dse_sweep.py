@@ -1,0 +1,55 @@
+"""Reproduce the paper's full design-space exploration in one run:
+Fig 2(e/f), Fig 3(d), Fig 4, Fig 5 cross-overs, Tables 2-3 — printed as
+readable tables.
+
+    PYTHONPATH=src python examples/dse_sweep.py
+"""
+from repro.core import dse
+
+
+def show(title, rows, cols):
+    print(f"\n=== {title} ===")
+    print("  ".join(f"{c:>12}" for c in cols))
+    for r in rows:
+        print("  ".join(f"{_fmt(r.get(c)):>12}" for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+show("Fig 2f: EDP vs node (SRAM-only)", dse.sweep_fig2f(),
+     ["workload", "arch", "node", "energy_uj", "latency_ms", "edp"])
+
+show("Fig 3d: 9 variants x {28,7}nm", dse.sweep_fig3d(),
+     ["workload", "node", "arch", "variant", "nvm", "energy_uj", "mem_uj"])
+
+show("Fig 4: read/write/compute", dse.fig4_breakdown(),
+     ["workload", "arch", "node", "variant", "read_uj", "write_uj",
+      "compute_uj"])
+
+show("Table 2: area @7nm", dse.table2_area(),
+     ["arch", "sram_mm2", "p0_mm2", "p1_mm2", "p0_savings", "p1_savings"])
+
+show("Table 3: P_mem savings @ IPS_min", dse.table3_ips(),
+     ["workload", "arch", "ips", "sram_latency_ms", "p0_latency_ms",
+      "p1_latency_ms", "p0_savings", "p1_savings"])
+
+xo = [r for r in dse.sweep_fig5(n_points=2) if r["crossover_ips"]]
+seen = set()
+print("\n=== Fig 5: cross-over IPS (NVM wins below) ===")
+for r in xo:
+    key = (r["workload"], r["arch"], r["variant"], r["device"])
+    if key in seen:
+        continue
+    seen.add(key)
+    print(f"  {r['workload']:8s} {r['arch']:8s} {r['variant']} "
+          f"{r['device']:6s}: {r['crossover_ips']:.2f} IPS")
+
+print("\n=== Beyond-paper: edge-LM KV-cache DSE ===")
+for r in dse.lm_kv_dse(arch_names=("simba",), archs=("llama3.2-1b",)):
+    print(f"  {r['model']} {r['variant']}/{r['device']:6s}: "
+          f"savings@10tok/s {r['savings_at_10tok_s']:+.0%}  "
+          f"crossover {r['crossover_tok_s'] and round(r['crossover_tok_s'],1)} tok/s")

@@ -1,0 +1,44 @@
+"""Quickstart: the paper's question in ~40 lines.
+
+Train a (smoke-scale) DetNet on synthetic FPHAB-style frames, quantize it to
+INT8, then ask the DSE engine: should this XR accelerator's memory be SRAM
+or MRAM, for a 10-inferences/second hand-tracking duty cycle?
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_smoke
+from repro.core import dse, nvm
+from repro.data import synthetic
+from repro.models import xr
+from repro.models.params import materialize
+from repro.quant import ptq
+from repro.train import loop
+
+# 1. train
+cfg = get_smoke("detnet")
+pdefs, sdefs = xr.param_defs(cfg)
+res = loop.run_xr_training(
+    cfg, materialize(pdefs, jax.random.key(0)),
+    materialize(sdefs, jax.random.key(1)),
+    synthetic.fphab_batches(8, cfg.input_hw, cfg.in_channels),
+    loss_fn=xr.circle_loss, steps=30, lr=3e-3,
+    hooks=loop.TrainHooks(log_every=10))
+
+# 2. quantize (TensorRT-style INT8 PTQ)
+qparams = ptq.quantize_params(res.params)
+print(f"\ntrained {sum(l.size for l in jax.tree.leaves(res.params)):,} params,"
+      f" final loss {res.losses[-1]:.3f}, quantized to INT8")
+
+# 3. design-space exploration at the 7nm node
+ips = 10.0
+sram = dse.evaluate(cfg, "simba", 7, "sram")
+print(f"\nSimba @7nm, {ips:.0f} inferences/s (hand-tracking duty cycle):")
+print(f"  SRAM-only : {nvm.memory_power_w(sram, ips)*1e6:8.1f} uW memory power")
+for variant in ("p0", "p1"):
+    r = dse.evaluate(cfg, "simba", 7, variant)
+    p = nvm.memory_power_w(r, ips)
+    print(f"  {variant.upper():10s}: {p*1e6:8.1f} uW "
+          f"({nvm.savings_at_ips(r, sram, ips):+.0%} vs SRAM, "
+          f"latency {r.latency_s*1e3:.2f} ms)")

@@ -1,0 +1,19 @@
+"""EDSNet — the paper's eye-segmentation workload (Fig 1e).
+
+UNet with MobileNetV2 backbone ("segmentation models" style decoder), four
+classes (background / sclera / iris / pupil). OpenEDS images are 400x640; we
+use 384x640 (divisible by 32 for the 5-level encoder). INT8 PTQ applied
+before DSE.
+"""
+from repro.configs.base import XRConfig, smoke_xr
+
+CONFIG = XRConfig(
+    name="edsnet",
+    task="segmentation",
+    input_hw=(384, 640),
+    in_channels=1,            # near-IR eye camera
+    num_classes=4,
+    decoder_channels=(256, 128, 64, 32, 16),
+)
+
+SMOKE = smoke_xr(CONFIG, input_hw=(32, 64))

@@ -1,0 +1,24 @@
+"""llama3.2-1b — small llama3-family dense model.
+
+[hf:meta-llama/Llama-3.2-1B; unverified]
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256, tied embeddings.
+"""
+from repro.configs.base import ModelConfig, smoke
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    act="silu",
+    tie_embeddings=True,
+    sub_quadratic=False,
+)
+
+SMOKE = smoke(CONFIG)

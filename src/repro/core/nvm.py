@@ -1,0 +1,83 @@
+"""NVM-oriented memory-power-vs-IPS analysis (paper §4-§5, Fig 5, Table 3).
+
+Temporal model (paper Fig 3a/b): WU -> FA -> inference -> power-gate. Between
+inferences:
+  * volatile (SRAM) levels hold state in data-retentive standby, drawing
+    current 100x below read current [11] — weights would otherwise need an
+    energy-hungry reload;
+  * non-volatile (MRAM) levels power OFF completely and pay a 100us wake-up
+    ramp per inference event.
+
+Average memory power at inference rate ``ips``:
+    P(ips) = ips * E_mem_inference + idle_frac * P_standby + ips * E_wake
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core import devices as dev
+from repro.core.energy import EnergyReport
+
+
+def wake_energy_j(report: EnergyReport) -> float:
+    """Power-up ramp for gated (non-volatile) levels over the 100us wake
+    window — rail-charge inrush at SRAM-retention-leakage scale. Volatile
+    levels never power off (drowsy standby instead): no wake ramp."""
+    ramp_w = sum(l.sram_leak_w for l in report.levels.values()
+                 if dev.DEVICES[l.tech].nonvolatile)
+    return dev.WAKEUP_TIME_S * ramp_w
+
+
+def memory_power_w(report: EnergyReport, ips: float) -> float:
+    """Average memory-subsystem power (W) at ``ips`` inferences/second.
+
+    Includes the operand-delivery fabric (NoC + collectors): it is part of
+    the memory subsystem's dynamic power (and why the paper's savings bands
+    are nearly workload-independent — delivery scales with MACs), but it is
+    register-class hardware: no variant converts it, and it is power-gated
+    with the accelerator so it contributes no standby."""
+    e_mem_j = report.mem_pj * 1e-12
+    duty = min(1.0, ips * report.latency_s)
+    idle_frac = max(0.0, 1.0 - duty)
+    return ips * e_mem_j + idle_frac * report.standby_w + ips * wake_energy_j(report)
+
+
+def weight_memory_power_w(report: EnergyReport, ips: float) -> float:
+    """Weight-class-only memory power (Fig 5 'weight' curves)."""
+    e_j = report.mem_pj_by_cls("weight") * 1e-12
+    duty = min(1.0, ips * report.latency_s)
+    return ips * e_j + max(0.0, 1.0 - duty) * report.weight_standby_w
+
+
+def savings_at_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
+                   ips: float) -> float:
+    """Fractional memory-power savings of an NVM variant vs SRAM-only."""
+    p_s = memory_power_w(sram_report, ips)
+    p_n = memory_power_w(nvm_report, ips)
+    return 1.0 - p_n / p_s
+
+
+def crossover_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
+                  lo: float = 1e-4) -> Optional[float]:
+    """IPS at which the NVM variant stops saving memory power vs SRAM-only.
+
+    Below the cross-over the NVM variant wins (standby elimination dominates);
+    above it the higher per-inference MRAM energy wins. Capped at the maximum
+    rate the (memory-limited) pipeline supports — the paper's "limited based
+    on maximum frequency supported by the memory architecture".
+    """
+    hi = nvm_report.max_ips
+    f = lambda ips: memory_power_w(nvm_report, ips) - memory_power_w(
+        sram_report, ips)
+    if f(lo) >= 0:
+        return None                     # never saves
+    if f(hi) < 0:
+        return hi                       # saves everywhere it can run -> cap
+    for _ in range(80):                 # bisection
+        mid = (lo * hi) ** 0.5
+        if f(mid) < 0:
+            lo = mid
+        else:
+            hi = mid
+    return (lo * hi) ** 0.5

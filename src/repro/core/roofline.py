@@ -1,0 +1,144 @@
+"""TPU roofline terms from compiled dry-run artifacts (assignment §Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` provides FLOPs / bytes accessed; collective bytes are
+parsed out of the HLO text (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  bf16[4096,1024]{1,0}  or  f32[]  or (tuple shapes handled per element)
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the HLO, by kind.
+
+    Uses the op's RESULT shape (left of '='), a standard proxy for the bytes
+    the collective moves per participating device.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match:  <name> = <shape(s)> <opcode>(...)
+        m = re.match(r"[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
+        if not m:
+            continue
+        opcode = m.group(2)
+        if opcode.rstrip("-") in _COLLECTIVES or opcode in _COLLECTIVES:
+            kind = opcode if opcode in _COLLECTIVES else opcode.rstrip("-")
+            out[kind] += _shape_bytes(m.group(1))
+        elif opcode.endswith("-start"):
+            base = opcode[:-6]
+            if base in _COLLECTIVES:
+                out[base] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    model_flops: float              # analytic 6ND (or 6·N_active·D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: overlapped terms -> max."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — exposes remat / redundancy waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the per-chip peak the step achieves at the bound:
+        useful model FLOPs per second at roofline step time / peak."""
+        if self.step_time_s == 0:
+            return 0.0
+        return (self.model_flops / self.step_time_s) / (
+            self.chips * PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict:
+        return dict(arch=self.arch, shape=self.shape, mesh=self.mesh,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    hlo_gflops=self.hlo_flops / 1e9,
+                    hlo_gb=self.hlo_bytes / 1e9,
+                    coll_gb=self.coll_bytes / 1e9,
+                    useful_flop_frac=self.useful_flop_frac,
+                    roofline_frac=self.roofline_frac)
+
+
+def from_compiled(compiled, hlo_text: str, *, arch: str, shape: str,
+                  mesh: str, chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(arch, shape, mesh, chips, flops, byts,
+                    float(sum(coll.values())), coll, model_flops)

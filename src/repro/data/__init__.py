@@ -1,0 +1,2 @@
+from repro.data.synthetic import (fphab_batches, openeds_batches,
+                                  token_batches)

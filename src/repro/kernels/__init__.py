@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  int8_matmul     -- MXU INT8 GEMM w/ fused per-channel dequant (PTQ serving)
+  depthwise_conv  -- VPU 3x3 depthwise (MobileNetV2 IRB hot path)
+  flash_attention -- online-softmax blockwise attention (LM prefill)
+  ssd_scan        -- Mamba-2 inter-chunk state recurrence
+  quantize        -- fused absmax->scale->round->clip activation quant
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching API.
+"""

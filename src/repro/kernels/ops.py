@@ -1,0 +1,61 @@
+"""Public kernel API: jit'd wrappers that dispatch to the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute in
+``interpret=True`` mode — the kernel body runs in Python with identical
+semantics, which is how tests/test_kernels.py validates them against the
+ref.py oracles. Shapes that violate a kernel's tiling contract fall back to
+the oracle (correctness first; the dry-run never hits the fallback on the
+tile sizes the configs use).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.depthwise_conv import depthwise_conv3x3_padded
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int8_matmul import int8_matmul as _int8_mm
+from repro.kernels.quantize import quantize_rows as _quant
+from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
+
+
+def _interp() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def int8_matmul(a, b, a_scale, b_scale, *, bm=128, bn=128, bk=128):
+    M, K = a.shape
+    N = b.shape[1]
+    if M % min(bm, M) or N % min(bn, N) or K % min(bk, K):
+        return ref.int8_matmul(a, b, a_scale, b_scale)
+    return _int8_mm(a, b, a_scale, b_scale, bm=bm, bn=bn, bk=bk,
+                    interpret=_interp())
+
+
+def depthwise_conv3x3(x, w, *, th=8, bc=128):
+    """NHWC stride-1 SAME 3x3 depthwise; w: (3,3,C)."""
+    B, H, W, C = x.shape
+    if H % min(th, H) or C % min(bc, C):
+        return ref.depthwise_conv3x3(x, w)
+    x_pad = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return depthwise_conv3x3_padded(x_pad, w, th=th, bc=bc,
+                                    interpret=_interp())
+
+
+def flash_attention(q, k, v, *, causal=True, bq=512, bk=512):
+    S = q.shape[2]
+    if S % min(bq, S) or S % min(bk, S):
+        return ref.flash_attention(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, bq=bq, bk=bk, interpret=_interp())
+
+
+def ssd_chunk_scan(states, decay):
+    return _ssd(states, decay, interpret=_interp())
+
+
+def quantize_rows(x, *, bm=256):
+    M = x.shape[0]
+    if M % min(bm, M):
+        return ref.quantize_rows(x)
+    return _quant(x, bm=bm, interpret=_interp())

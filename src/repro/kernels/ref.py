@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the kernel must match under
+``np.testing.assert_allclose`` across the shape/dtype sweeps in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def int8_matmul(a: jax.Array, b: jax.Array, a_scale: jax.Array,
+                b_scale: jax.Array) -> jax.Array:
+    """(M,K) int8 x (K,N) int8 -> (M,N) f32, int32 accumulation,
+    per-row a_scale (M,) and per-column b_scale (N,) dequant epilogue."""
+    acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(f32) * a_scale[:, None] * b_scale[None, :]
+
+
+def depthwise_conv3x3(x: jax.Array, w: jax.Array) -> jax.Array:
+    """NHWC depthwise 3x3, stride 1, SAME padding. w: (3,3,C)."""
+    C = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w[:, :, None, :], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=C)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """(B,H,S,D) fp32/bf16 attention with fp32 softmax."""
+    S = q.shape[2]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(f32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=f32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(q.dtype), v)
+
+
+def ssd_chunk_scan(states: jax.Array, decay: jax.Array) -> jax.Array:
+    """Mamba-2 inter-chunk state recurrence.
+
+    states: (B, NC, H, P, N) per-chunk contributions; decay: (B, NC, H)
+    per-chunk decay exp(sum dA). Returns prev_states: state BEFORE each
+    chunk: prev[c] = sum_{z<c} (prod_{z<j<=c-1...}) — i.e. the linear scan
+        s_0 = 0;  s_{c+1} = s_c * decay[c] + states[c]
+    returning s_c for each c.
+    """
+    B, NC, H, P, N = states.shape
+
+    def body(carry, xs):
+        st, d = xs
+        out = carry
+        new = carry * d[..., None, None] + st
+        return new, out
+
+    _, prev = jax.lax.scan(
+        body, jnp.zeros((B, H, P, N), states.dtype),
+        (states.swapaxes(0, 1), decay.swapaxes(0, 1)))
+    return prev.swapaxes(0, 1)
+
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric INT8: returns (codes int8, scales (M,) f32)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / s[:, None]), -127, 127).astype(jnp.int8)
+    return q, s.astype(f32)

@@ -1,0 +1,109 @@
+"""Distributed training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        [--smoke] [--steps N] [--batch B] [--seq S] [--ckpt-dir DIR] \
+        [--compress-grads] [--mesh auto|production|multipod]
+
+On this CPU container use --smoke (reduced config, real optimization); the
+full configs are exercised via the dry-run. The same driver runs on a real
+TPU slice: the mesh is built from the live device set and in_shardings come
+from the same logical-axis rules the dry-run proved out.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.data import synthetic
+from repro.launch import mesh as mesh_mod
+from repro.models import lm
+from repro.models.params import abstract, logical_axes, materialize
+from repro.sharding import fix_divisibility, spec_tree, use_mesh
+from repro.train import checkpoint as ckpt_mod
+from repro.train import compress as compress_mod
+from repro.train import optim
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=25)
+    p.add_argument("--compress-grads", action="store_true")
+    p.add_argument("--mesh", default="auto",
+                   choices=["auto", "production", "multipod"])
+    a = p.parse_args()
+
+    cfg = get_smoke(a.arch) if a.smoke else get_config(a.arch)
+    if a.mesh == "auto":
+        mesh = mesh_mod.make_mesh_from_devices(
+            model_parallel=min(4, len(jax.devices())))
+    else:
+        mesh = mesh_mod.make_production_mesh(multi_pod=a.mesh == "multipod")
+    print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"params={cfg.param_count():,}")
+
+    pdefs = lm.param_defs(cfg)
+    lr_fn = optim.cosine_schedule(a.lr, warmup=max(1, a.steps // 10),
+                                  total=a.steps)
+
+    def train_step(params, opt_state, err, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.lm_loss, has_aux=True, argnums=1)(cfg, params, batch)
+        if a.compress_grads:
+            q, s, err = compress_mod.compress(grads, err)
+            grads = compress_mod.decompress(q, s)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = optim.adamw_update(
+            grads, opt_state, params, lr=lr_fn(step))
+        return params, opt_state, err, loss
+
+    with use_mesh(mesh):
+        params = materialize(pdefs, jax.random.key(0))
+        shardings = fix_divisibility(
+            spec_tree(logical_axes(pdefs), mesh), abstract(pdefs))
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s else x, params, shardings,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+        opt_state = optim.adamw_init(params)
+        err = (compress_mod.init_error(params) if a.compress_grads
+               else jnp.zeros(()))
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+        start = 0
+        if a.ckpt_dir and ckpt_mod.latest_step(a.ckpt_dir) is not None:
+            tree = {"p": params, "o": opt_state}
+            tree, start, _ = ckpt_mod.restore(a.ckpt_dir, tree)
+            params, opt_state = tree["p"], tree["o"]
+            print(f"resumed from step {start}")
+
+        batches = synthetic.token_batches(a.batch, a.seq, cfg.vocab_size,
+                                          start_idx=start * a.batch)
+        for step in range(start, a.steps):
+            t0 = time.monotonic()
+            batch, loader_idx = next(batches)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, err, loss = step_fn(
+                params, opt_state, err, batch, jnp.asarray(step))
+            if step % 10 == 0 or step == a.steps - 1:
+                print(f"step {step:4d} loss {float(loss):.4f} "
+                      f"({time.monotonic()-t0:.2f}s/step)")
+            if a.ckpt_dir and (step + 1) % a.ckpt_every == 0:
+                ckpt_mod.save(a.ckpt_dir, step + 1,
+                              {"p": params, "o": opt_state},
+                              extra={"loader_idx": loader_idx})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

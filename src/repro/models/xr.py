@@ -1,0 +1,339 @@
+"""The paper's XR workloads in pure JAX: MobileNetV2, DetNet, EDSNet.
+
+The architecture is expressed as a *plan* — a flat list of typed steps — and
+everything else derives from it:
+
+  * ``param_defs`` / ``state_defs``  — parameter + BN-state pytrees,
+  * ``forward``                      — NHWC interpreter over the plan,
+  * ``conv_layer_specs``             — the per-layer workload descriptors the
+    DSE plane (repro.core.workload) consumes.
+
+One source of truth guarantees the energy model simulates exactly the network
+we train/quantize (the paper couples these through pytorch2timeloop; we couple
+them structurally).
+
+BatchNorm runs in batch-stat mode during training with EMA running stats kept
+in a separate ``state`` pytree (inference uses the EMA values) — matching the
+paper's standard MBv2 recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ConvLayerSpec, XRConfig
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Step:
+    name: str
+    op: str                  # conv | dwconv | dense | gpool | upsample | concat | add
+    out_ch: int = 0
+    kernel: int = 1
+    stride: int = 1
+    relu: bool = True        # relu6 after BN (convs) / relu after dense
+    bn: bool = True          # conv steps: batchnorm
+    src: str = "_"           # input tensor ("_" = running value)
+    skip: str = ""           # concat/add: second tensor name
+    save_as: str = ""        # store output under this tap name
+
+
+def _ch(cfg: XRConfig, c: int) -> int:
+    if cfg.width_mult == 1.0:
+        return c
+    return max(8, int(c * cfg.width_mult + 4) // 8 * 8)
+
+
+def build_plan(cfg: XRConfig) -> List[Step]:
+    """MobileNetV2 trunk (+ DetNet heads or UNet decoder)."""
+    steps: List[Step] = []
+    stride_now = 2
+    steps.append(Step("stem", "conv", _ch(cfg, cfg.stem_channels), 3, 2))
+    in_ch = _ch(cfg, cfg.stem_channels)
+    taps: Dict[int, str] = {}     # stride -> tap name
+
+    bi = 0
+    for (t, c, n, s) in cfg.stages:
+        c = _ch(cfg, c)
+        for r in range(n):
+            stride = s if r == 0 else 1
+            if stride == 2:
+                tap = f"tap_s{stride_now}"
+                # retroactively mark the previous step to save its output
+                steps[-1] = dataclasses.replace(steps[-1], save_as=tap)
+                taps[stride_now] = tap
+                stride_now *= 2
+            pfx = f"irb{bi}"
+            exp = t * in_ch
+            res_src = ""
+            if stride == 1 and exp != in_ch and c == in_ch:
+                res_src = f"{pfx}_in"
+                steps[-1] = dataclasses.replace(steps[-1], save_as=res_src)
+            if t != 1:
+                steps.append(Step(f"{pfx}_expand", "conv", exp, 1, 1))
+            steps.append(Step(f"{pfx}_dw", "dwconv", exp, 3, stride))
+            steps.append(Step(f"{pfx}_project", "conv", c, 1, 1, relu=False))
+            if res_src:
+                steps.append(Step(f"{pfx}_add", "add", skip=res_src))
+            in_ch = c
+            bi += 1
+
+    if cfg.task == "detection":
+        head = _ch(cfg, cfg.head_channels)
+        steps.append(Step("head_conv", "conv", head, 1, 1))
+        steps.append(Step("gpool", "gpool", save_as="gpool_out"))
+        # three regression nets: circle center (2 hands x xy), radius (2),
+        # left/right label logits (2)  [paper Fig 1d]
+        for hname, hdim in (("center", 4), ("radius", 2), ("label", 2)):
+            steps.append(Step(f"{hname}_fc1", "dense", 64, src="gpool_out"))
+            steps.append(Step(f"{hname}_out", "dense", hdim, relu=False,
+                              save_as=f"out_{hname}"))
+    else:
+        # UNet decoder [paper Fig 1e: "segmentation models" MBv2-UNet]
+        for i, dc in enumerate(cfg.decoder_channels):
+            stride_now //= 2
+            steps.append(Step(f"dec{i}_up", "upsample"))
+            if stride_now in taps:
+                steps.append(Step(f"dec{i}_cat", "concat", skip=taps[stride_now]))
+            steps.append(Step(f"dec{i}_conv1", "conv", dc, 3, 1))
+            steps.append(Step(f"dec{i}_conv2", "conv", dc, 3, 1))
+        steps.append(Step("seg_head", "conv", cfg.num_classes, 3, 1,
+                          relu=False, bn=False, save_as="out_mask"))
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# shape walking (shared by param_defs and the DSE extractor)
+# ---------------------------------------------------------------------------
+
+def _walk(cfg: XRConfig, visit):
+    """Run shape inference over the plan, calling visit(step, in_hw, in_ch)."""
+    h, w = cfg.input_hw
+    shapes: Dict[str, Tuple[int, int, int]] = {}
+    cur = (h, w, cfg.in_channels)
+    for st in build_plan(cfg):
+        src = cur if st.src == "_" else shapes[st.src]
+        visit(st, src)
+        if st.op in ("conv", "dwconv"):
+            out = (max(1, src[0] // st.stride), max(1, src[1] // st.stride),
+                   st.out_ch)
+        elif st.op == "dense":
+            out = (1, 1, st.out_ch)
+        elif st.op == "gpool":
+            out = (1, 1, src[2])
+        elif st.op == "upsample":
+            out = (src[0] * 2, src[1] * 2, src[2])
+        elif st.op == "concat":
+            other = shapes[st.skip]
+            out = (src[0], src[1], src[2] + other[2])
+        elif st.op == "add":
+            out = src
+        else:
+            raise ValueError(st.op)
+        cur = out
+        if st.save_as:
+            shapes[st.save_as] = out
+    return cur
+
+
+def param_defs(cfg: XRConfig) -> Tuple[Dict, Dict]:
+    """Returns (params, bn_state) ParamDef pytrees."""
+    params: Dict[str, Dict] = {}
+    state: Dict[str, Dict] = {}
+
+    def visit(st: Step, src):
+        cin = src[2]
+        if st.op == "conv":
+            params[st.name] = {"w": ParamDef(
+                (st.kernel, st.kernel, cin, st.out_ch),
+                (None, None, "conv", "conv"), "scaled", "float32")}
+        elif st.op == "dwconv":
+            params[st.name] = {"w": ParamDef(
+                (st.kernel, st.kernel, 1, cin),
+                (None, None, None, "conv"), "scaled", "float32", scale=3.0)}
+        elif st.op == "dense":
+            params[st.name] = {
+                "w": ParamDef((cin, st.out_ch), ("conv", "conv"),
+                              "scaled", "float32"),
+                "b": ParamDef((st.out_ch,), ("conv",), "zeros", "float32")}
+        if st.op in ("conv", "dwconv") and st.bn:
+            C = st.out_ch
+            params[st.name]["bn_scale"] = ParamDef((C,), ("conv",), "ones",
+                                                   "float32")
+            params[st.name]["bn_bias"] = ParamDef((C,), ("conv",), "zeros",
+                                                  "float32")
+            state[st.name] = {
+                "mean": ParamDef((C,), ("conv",), "zeros", "float32"),
+                "var": ParamDef((C,), ("conv",), "ones", "float32")}
+
+    _walk(cfg, visit)
+    return params, state
+
+
+def conv_layer_specs(cfg: XRConfig) -> List[ConvLayerSpec]:
+    """Workload descriptors for the DSE plane (one per MAC-bearing step)."""
+    out: List[ConvLayerSpec] = []
+
+    def visit(st: Step, src):
+        if st.op == "conv":
+            out.append(ConvLayerSpec(st.name, "conv", src[2], st.out_ch,
+                                     st.kernel, st.stride, (src[0], src[1])))
+        elif st.op == "dwconv":
+            out.append(ConvLayerSpec(st.name, "dwconv", src[2], st.out_ch,
+                                     st.kernel, st.stride, (src[0], src[1])))
+        elif st.op == "dense":
+            out.append(ConvLayerSpec(st.name, "dense", src[2], st.out_ch,
+                                     1, 1, (1, 1)))
+
+    _walk(cfg, visit)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _batchnorm(x, p, s, train: bool, momentum: float = 0.9):
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    inv = lax.rsqrt(var + 1e-5) * p["bn_scale"]
+    return (x - mean) * inv + p["bn_bias"], new_s
+
+
+def _conv(x, w, stride: int, groups: int = 1):
+    k = w.shape[0]
+    pad = (k - 1) // 2
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, k - 1 - pad), (pad, k - 1 - pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def forward(cfg: XRConfig, params: Dict, state: Dict, images: jax.Array,
+            *, train: bool = False,
+            act_scales: Optional[Dict[str, float]] = None,
+            collect_acts: bool = False) -> Tuple[Dict, Dict]:
+    """images: (B,H,W,Cin) fp32. Returns (outputs dict, new bn state).
+
+    ``act_scales``: per-layer symmetric INT8 scales -> fake-quantize each
+    conv/dense output (PTQ inference). ``collect_acts``: additionally return
+    every conv/dense output under outputs["acts"] (calibration pass).
+    """
+    x = images
+    tensors: Dict[str, jax.Array] = {}
+    outputs: Dict[str, jax.Array] = {}
+    new_state: Dict[str, Dict] = {}
+    collected: Dict[str, jax.Array] = {}
+
+    def _aq(name, y):
+        if collect_acts:
+            collected[name] = y
+        if act_scales and name in act_scales:
+            s = act_scales[name]
+            y = jnp.clip(jnp.round(y / s), -127, 127) * s
+        return y
+
+    for st in build_plan(cfg):
+        src = x if st.src == "_" else tensors[st.src]
+        if st.op in ("conv", "dwconv"):
+            p = params[st.name]
+            groups = src.shape[-1] if st.op == "dwconv" else 1
+            y = _conv(src, p["w"], st.stride, groups)
+            if st.bn:
+                y, new_state[st.name] = _batchnorm(y, p, state[st.name], train)
+            if st.relu:
+                y = jnp.clip(y, 0.0, 6.0)          # relu6
+            y = _aq(st.name, y)
+        elif st.op == "dense":
+            p = params[st.name]
+            v = src.reshape(src.shape[0], -1)
+            y = v @ p["w"] + p["b"]
+            if st.relu:
+                y = jax.nn.relu(y)
+            y = _aq(st.name, y)
+        elif st.op == "gpool":
+            y = jnp.mean(src, axis=(1, 2), keepdims=True)
+        elif st.op == "upsample":
+            B, H, W, C = src.shape
+            y = jnp.repeat(jnp.repeat(src, 2, axis=1), 2, axis=2)
+        elif st.op == "concat":
+            y = jnp.concatenate([src, tensors[st.skip]], axis=-1)
+        elif st.op == "add":
+            y = src + tensors[st.skip]
+        else:
+            raise ValueError(st.op)
+        x = y
+        if st.save_as:
+            tensors[st.save_as] = y
+            if st.save_as.startswith("out_"):
+                outputs[st.save_as[4:]] = y
+    if collect_acts:
+        outputs["acts"] = collected
+    return outputs, new_state
+
+
+# ---------------------------------------------------------------------------
+# losses (paper §2.2)
+# ---------------------------------------------------------------------------
+
+def circle_loss(outputs: Dict, batch: Dict, center_weight: float = 10.0
+                ) -> Tuple[jax.Array, Dict]:
+    """DetNet: weighted MSE on circle center+radius, CE on hand label."""
+    center = outputs["center"].reshape(-1, 2, 2)
+    radius = outputs["radius"]
+    mse_c = jnp.mean((center - batch["center"]) ** 2)
+    mse_r = jnp.mean((radius - batch["radius"]) ** 2)
+    circle = center_weight * mse_c + mse_r
+    logits = outputs["label"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["label"][:, None], axis=-1)[:, 0]
+    ce = jnp.mean(logz - gold)
+    return circle + ce, {"circle": circle, "label_ce": ce,
+                         "center_mse": mse_c, "radius_mse": mse_r}
+
+
+def dice_loss(outputs: Dict, batch: Dict, eps: float = 1.0
+              ) -> Tuple[jax.Array, Dict]:
+    """EDSNet: soft multi-class Dice over (B,H,W,C) logits vs int masks."""
+    logits = outputs["mask"]
+    C = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(batch["mask"], C, dtype=f32)
+    inter = jnp.sum(probs * onehot, axis=(0, 1, 2))
+    union = jnp.sum(probs + onehot, axis=(0, 1, 2))
+    dice = (2 * inter + eps) / (union + eps)
+    loss = 1.0 - jnp.mean(dice)
+    return loss, {"dice": 1.0 - loss}
+
+
+def iou(outputs: Dict, batch: Dict) -> jax.Array:
+    """Mean IoU for eval."""
+    pred = jnp.argmax(outputs["mask"], axis=-1)
+    C = outputs["mask"].shape[-1]
+    ious = []
+    for c in range(C):
+        p, g = pred == c, batch["mask"] == c
+        inter = jnp.sum(p & g)
+        union = jnp.sum(p | g)
+        ious.append(jnp.where(union > 0, inter / jnp.maximum(union, 1), 1.0))
+    return jnp.mean(jnp.stack(ious))

@@ -1,0 +1,3 @@
+from repro.quant.ptq import (calibrate_acts, fake_quant, forward_int8,
+                             quantize_params, quantize_tensor,
+                             weight_histogram)

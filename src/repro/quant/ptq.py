@@ -1,0 +1,106 @@
+"""INT8 post-training quantization (paper §2.2, TensorRT-style).
+
+Calibrated affine quantization:
+  * weights: symmetric per-output-channel scales (minmax),
+  * activations: symmetric per-tensor scales from calibration batches
+    (minmax or percentile), applied as fake-quant after each conv/dense.
+
+Fake-quant simulates the INT8 datapath bit-exactly for symmetric scales
+(round-to-nearest-even, clip to [-127, 127]) while staying in float — the
+standard PTQ evaluation method; the Pallas INT8 kernel (kernels/int8_matmul)
+consumes the same scales for true integer execution on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = 127.0
+
+
+def minmax_scale(x: jax.Array, axis=None) -> jax.Array:
+    """Symmetric scale = absmax / 127 (per-channel if axis given)."""
+    if axis is None:
+        return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / QMAX
+    red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=red), 1e-8) / QMAX
+
+
+def percentile_scale(x: jax.Array, pct: float = 99.9) -> jax.Array:
+    return jnp.maximum(jnp.percentile(jnp.abs(x), pct), 1e-8) / QMAX
+
+
+def quantize_tensor(w: jax.Array, axis: int = -1
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """-> (int8 codes, per-channel scale along `axis`)."""
+    s = minmax_scale(w, axis=axis)
+    shape = [1] * w.ndim
+    shape[axis % w.ndim] = -1
+    q = jnp.clip(jnp.round(w / s.reshape(shape)), -QMAX, QMAX)
+    return q.astype(jnp.int8), s
+
+
+def fake_quant(x: jax.Array, scale: jax.Array, axis: Optional[int] = None
+               ) -> jax.Array:
+    if axis is not None:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        scale = scale.reshape(shape)
+    return jnp.clip(jnp.round(x / scale), -QMAX, QMAX) * scale
+
+
+def _is_weight(path: Tuple, leaf) -> bool:
+    key = str(path[-1])
+    return ("'w'" in key or "'wq'" in key or "'wk'" in key or "'wv'" in key
+            or "'wo'" in key or "'wi" in key or "'we" in key) and (
+        hasattr(leaf, "ndim") and leaf.ndim >= 2)
+
+
+def quantize_params(params, channel_axis: int = -1):
+    """Fake-quantize every conv/dense weight in a param tree (per-channel)."""
+    def f(path, leaf):
+        if _is_weight(path, leaf):
+            return fake_quant(leaf, minmax_scale(leaf, channel_axis),
+                              channel_axis)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def calibrate_acts(forward_fn, batches: Iterable, pct: Optional[float] = 99.9
+                   ) -> Dict[str, float]:
+    """Run calibration batches, collect per-layer post-activation scales.
+
+    ``forward_fn(batch) -> Dict[layer_name, activation]`` (the XR model's
+    ``forward`` exposes taps via ``collect_acts``).
+    """
+    maxes: Dict[str, float] = {}
+    for batch in batches:
+        acts = forward_fn(batch)
+        for name, a in acts.items():
+            if pct is None:
+                m = float(jnp.max(jnp.abs(a)))
+            else:
+                m = float(jnp.percentile(jnp.abs(a), pct))
+            maxes[name] = max(maxes.get(name, 0.0), m)
+    return {k: max(v, 1e-8) / QMAX for k, v in maxes.items()}
+
+
+def forward_int8(cfg, params, state, images, act_scales=None):
+    """XR inference with fake-quantized weights (+ optional act quant)."""
+    from repro.models import xr
+    qparams = quantize_params(params)
+    return xr.forward(cfg, qparams, state, images, train=False,
+                      act_scales=act_scales)
+
+
+def weight_histogram(params, bins: int = 101, rng=(-0.5, 0.5)
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Fig 1(i): weight-value histogram across all layers."""
+    leaves = [np.asarray(l, np.float32).ravel()
+              for l in jax.tree.leaves(params)
+              if hasattr(l, "ndim") and l.ndim >= 2]
+    allw = np.concatenate(leaves)
+    return np.histogram(allw, bins=bins, range=rng)

@@ -1,0 +1,40 @@
+"""INT8 gradient compression with error feedback (distributed-opt trick).
+
+Before the data-parallel all-reduce, each leaf is quantized to int8 with a
+per-leaf scale; the quantization residual is carried to the next step
+(error feedback), which keeps SGD/Adam convergence unbiased in expectation.
+Cuts all-reduce bytes 4x vs fp32 / 2x vs bf16 — applied inside train_step
+so GSPMD reduces the int8 tensors (see launch/train.py --compress-grads).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+def compress(grads, error):
+    """-> (int8 codes, scales, new_error). Apply BEFORE the mean-reduce."""
+    def one(g, e):
+        gf = g.astype(f32) + e
+        s = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(f32) * s
+        return q, s, new_e
+    out = jax.tree.map(one, grads, error)
+    istuple = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=istuple)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=istuple)
+    e = jax.tree.map(lambda t: t[2], out, is_leaf=istuple)
+    return q, s, e
+
+
+def decompress(q, s):
+    return jax.tree.map(lambda qq, ss: qq.astype(f32) * ss, q, s)

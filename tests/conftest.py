@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests / benches see the single real CPU device. ONLY the dry-run
+# launcher (repro.launch.dryrun) forces 512 host devices — never set that
+# flag here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,87 @@
+"""PTQ tests (paper §2.2 / Fig 1): calibration, fake-quant, histograms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models import xr
+from repro.models.params import materialize
+from repro.quant import ptq
+
+
+@given(st.integers(2, 6), st.integers(2, 40))
+@settings(max_examples=25, deadline=None)
+def test_fake_quant_idempotent(m, n):
+    """fake_quant(fake_quant(x)) == fake_quant(x) — a fixed point."""
+    x = jnp.asarray(np.random.default_rng(m * 100 + n).normal(size=(m, n)),
+                    jnp.float32)
+    s = ptq.minmax_scale(x)
+    q1 = ptq.fake_quant(x, s)
+    q2 = ptq.fake_quant(q1, s)
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+@given(st.integers(2, 8), st.integers(2, 32))
+@settings(max_examples=25, deadline=None)
+def test_quant_error_bounded_by_half_step(m, n):
+    x = jnp.asarray(np.random.default_rng(m * 77 + n).normal(size=(m, n)),
+                    jnp.float32)
+    codes, s = ptq.quantize_tensor(x, axis=-1)
+    rec = codes.astype(jnp.float32) * s[None, :]
+    step = np.asarray(s)[None, :]
+    assert np.all(np.abs(np.asarray(rec - x)) <= step * 0.5 + 1e-7)
+
+
+def test_per_channel_beats_per_tensor():
+    """Per-channel scales (TensorRT-style) must not increase MSE."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 32)) * rng.uniform(0.01, 2.0, (1, 32))
+    w = jnp.asarray(w, jnp.float32)
+    pc = ptq.fake_quant(w, ptq.minmax_scale(w, axis=-1), axis=-1)
+    pt = ptq.fake_quant(w, ptq.minmax_scale(w))
+    assert float(jnp.mean((pc - w) ** 2)) <= float(jnp.mean((pt - w) ** 2))
+
+
+def test_quantized_detnet_outputs_close():
+    """Paper Fig 1(g): INT8 DetNet inference stays close to FP32."""
+    cfg = get_smoke("detnet")
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+    img = jax.random.normal(jax.random.key(2),
+                            (2, *cfg.input_hw, cfg.in_channels))
+    fp, _ = xr.forward(cfg, params, state, img)
+    q, _ = ptq.forward_int8(cfg, params, state, img)
+    for k in fp:
+        rel = (float(jnp.max(jnp.abs(fp[k] - q[k])))
+               / (float(jnp.max(jnp.abs(fp[k]))) + 1e-9))
+        assert rel < 0.35, (k, rel)
+
+
+def test_weight_histogram_discrete_after_quant():
+    """Paper Fig 1(i): quantized weights show discrete levels — strictly
+    fewer unique values than fp32."""
+    cfg = get_smoke("detnet")
+    pdefs, _ = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    qparams = ptq.quantize_params(params)
+    w = np.asarray(params["stem"]["w"]).ravel()
+    qw = np.asarray(qparams["stem"]["w"]).ravel()
+    assert len(np.unique(qw)) < len(np.unique(w))
+    assert len(np.unique(qw)) <= 255 * w.size // w.size + 255
+
+
+def test_calibration_collects_all_mac_layers():
+    cfg = get_smoke("edsnet")
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+    img = jax.random.normal(jax.random.key(2),
+                            (1, *cfg.input_hw, cfg.in_channels))
+    scales = ptq.calibrate_acts(
+        lambda b: xr.forward(cfg, params, state, b,
+                             collect_acts=True)[0]["acts"], [img])
+    assert set(scales) == set(pdefs)
+    assert all(s > 0 for s in scales.values())

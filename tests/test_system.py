@@ -1,0 +1,88 @@
+"""End-to-end system tests: data determinism + the full paper pipeline
+(train -> quantize -> DSE) at smoke scale."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import dse, nvm as nvm_mod
+from repro.data import synthetic
+from repro.models import xr
+from repro.models.params import materialize
+from repro.quant import ptq
+
+
+def test_data_deterministic_and_shardable():
+    """Pure function of (seed, idx): two loaders at the same index agree --
+    the property that lets 1000 hosts shard without coordination."""
+    a = synthetic.fphab_sample(0, 123, (32, 32))
+    b = synthetic.fphab_sample(0, 123, (32, 32))
+    np.testing.assert_array_equal(a["image"], b["image"])
+    c = synthetic.fphab_sample(0, 124, (32, 32))
+    assert np.abs(a["image"] - c["image"]).max() > 0
+
+    g1 = synthetic.token_batches(2, 8, 100, start_idx=4)
+    g2 = synthetic.token_batches(2, 8, 100, start_idx=4)
+    b1, i1 = next(g1)
+    b2, i2 = next(g2)
+    assert i1 == i2
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_openeds_masks_valid():
+    s = synthetic.openeds_sample(0, 7, (64, 96))
+    assert set(np.unique(s["mask"])).issubset({0, 1, 2, 3})
+    # pupil smaller than iris
+    assert (s["mask"] == 3).sum() < (s["mask"] == 2).sum()
+
+
+def test_paper_pipeline_end_to_end():
+    """The full loop the paper describes: train a (smoke) DetNet, quantize
+    it, extract its workload, and run the NVM DSE on it."""
+    cfg = get_smoke("detnet")
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+
+    from repro.train import loop
+    batches = synthetic.fphab_batches(4, cfg.input_hw, cfg.in_channels)
+    res = loop.run_xr_training(cfg, params, state, batches,
+                               loss_fn=xr.circle_loss, steps=5, lr=1e-3,
+                               hooks=loop.TrainHooks(log_every=0))
+
+    qparams = ptq.quantize_params(res.params)
+    img = jnp.asarray(synthetic.fphab_sample(0, 0, cfg.input_hw)["image"])[None]
+    outs, _ = xr.forward(cfg, qparams, res.extras["state"], img)
+    assert bool(jnp.isfinite(outs["center"]).all())
+
+    # same config straight into the DSE plane
+    sram = dse.evaluate(cfg, "simba", 7, "sram")
+    p1 = dse.evaluate(cfg, "simba", 7, "p1")
+    assert sram.total_pj > 0 and p1.total_pj > 0
+    assert nvm_mod.memory_power_w(p1, 1.0) > 0
+
+
+def test_checkpoint_restart_resumes_training(tmp_path):
+    """Kill-and-restart: a resumed run continues from the checkpoint."""
+    cfg = get_smoke("detnet")
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+    from repro.train import checkpoint as ckpt
+    from repro.train import loop
+
+    batches = synthetic.fphab_batches(2, cfg.input_hw, cfg.in_channels)
+    loop.run_xr_training(cfg, params, state, batches,
+                         loss_fn=xr.circle_loss, steps=4, lr=1e-3,
+                         ckpt_dir=str(tmp_path), ckpt_every=2,
+                         hooks=loop.TrainHooks(log_every=0))
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+    # restart: resumes at 4, runs to 6
+    batches = synthetic.fphab_batches(2, cfg.input_hw, cfg.in_channels)
+    res = loop.run_xr_training(cfg, params, state, batches,
+                               loss_fn=xr.circle_loss, steps=6, lr=1e-3,
+                               ckpt_dir=str(tmp_path), ckpt_every=2,
+                               hooks=loop.TrainHooks(log_every=0))
+    assert res.step == 6
+    assert len(res.losses) == 2          # only steps 4,5 ran after resume

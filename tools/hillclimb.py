@@ -1,0 +1,109 @@
+"""Hillclimb driver: compile ONE dry-run cell with config/rule overrides and
+print roofline terms + an HLO byte/op profile (the CPU-only 'profiler').
+
+  PYTHONPATH=src python tools/hillclimb.py --arch gemma2-9b --shape decode_32k \
+      [--set swa_ring_buffer=True] [--rule expert_cap=pod,data] [--profile]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import argparse
+import collections
+import dataclasses
+import re
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config
+from repro.core import roofline as rl
+from repro.launch import dryrun, mesh as mesh_mod
+from repro.models import lm as lm_mod
+from repro.sharding import fix_divisibility, spec_tree, use_mesh
+
+
+def parse_override(s):
+    k, v = s.split("=", 1)
+    try:
+        v = eval(v, {}, {})
+    except Exception:
+        pass
+    return k, v
+
+
+def profile_hlo(hlo: str, top: int = 18):
+    """Aggregate result-shape bytes by opcode + biggest single ops."""
+    by_op = collections.Counter()
+    biggest = []
+    for line in hlo.splitlines():
+        m = re.match(r"\s*[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", line)
+        if not m:
+            continue
+        b = rl._shape_bytes(m.group(1))
+        by_op[m.group(2)] += b
+        biggest.append((b, m.group(2), m.group(1)[:60]))
+    print("\n-- bytes by opcode (result shapes, per-device HLO) --")
+    for op, b in by_op.most_common(top):
+        print(f"   {op:<28}{b/1e9:10.2f} GB")
+    print("-- biggest single ops --")
+    for b, op, shape in sorted(biggest, reverse=True)[:8]:
+        print(f"   {b/1e9:8.2f} GB  {op:<20}{shape}")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--set", action="append", default=[],
+                   help="cfg field override, e.g. swa_ring_buffer=True")
+    p.add_argument("--rule", action="append", default=[],
+                   help="sharding rule override, e.g. expert_cap=pod,data")
+    p.add_argument("--profile", action="store_true")
+    a = p.parse_args()
+
+    cfg = get_config(a.arch)
+    if a.set:
+        cfg = dataclasses.replace(cfg, **dict(parse_override(s) for s in a.set))
+    mesh = mesh_mod.make_production_mesh(multi_pod=a.multi_pod)
+    rules = mesh_mod.shape_rules(cfg, a.shape) or {}
+    for r in a.rule:
+        k, v = r.split("=", 1)
+        rules[k] = tuple(v.split(",")) if v else None
+
+    R_full = lm_mod.num_repeats(cfg)
+    t0 = time.monotonic()
+    compiled = dryrun._compile_cell(cfg, a.shape, mesh, rules)
+    c1 = dryrun._costs(dryrun._compile_cell(
+        dryrun._scaled_cfg(cfg, 1, enc_layers=1), a.shape, mesh, rules))
+    c2c = dryrun._compile_cell(dryrun._scaled_cfg(cfg, 2, enc_layers=1),
+                               a.shape, mesh, rules)
+    c2 = dryrun._costs(c2c)
+    cost = [c1[i] + (c2[i] - c1[i]) * (R_full - 1) for i in range(3)]
+    if cfg.encoder_layers > 1:
+        c1e = dryrun._costs(dryrun._compile_cell(
+            dryrun._scaled_cfg(cfg, 1, enc_layers=2), a.shape, mesh, rules))
+        for i in range(3):
+            cost[i] += (c1e[i] - c1[i]) * (cfg.encoder_layers - 1)
+    n = mesh.devices.size
+    r = rl.Roofline(a.arch, a.shape, "x".join(map(str, mesh.devices.shape)),
+                    n, cost[0] * n, cost[1] * n, cost[2] * n, c2[3],
+                    mesh_mod.model_flops(cfg, a.shape))
+    print(f"\n=== {a.arch} x {a.shape} "
+          f"overrides={a.set} rules={a.rule} ({time.monotonic()-t0:.0f}s) ===")
+    print(f"t_compute={r.t_compute*1e3:.2f}ms t_memory={r.t_memory*1e3:.2f}ms "
+          f"t_collective={r.t_collective*1e3:.2f}ms bound={r.bottleneck}")
+    print(f"useful={r.useful_flop_frac:.3f} roofline_frac={r.roofline_frac:.5f}")
+    print("collectives/dev: " + ", ".join(
+        f"{k}={v/1e9:.2f}GB" for k, v in c2[3].items() if v))
+    if a.profile:
+        profile_hlo(c2c.as_text())
+
+
+if __name__ == "__main__":
+    main()
