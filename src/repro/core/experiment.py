@@ -1,0 +1,674 @@
+"""Experiment engine: cached + batched evaluation over a ``DesignSpace``.
+
+The expensive per-point work of the DSE pipeline is strictly layered:
+
+    extract specs  ->  size buffers  ->  build arch  ->  map (Timeloop-lite)
+    (jax model plan)   (suite max)       (banked macros)  (access counts)
+                                   -> price (Accelergy-lite, per variant/node)
+
+Everything left of ``price`` is *pricing-independent*: access counts are set
+by buffer capacities, which P0/P1/node do not change (see ``core.dataflow``).
+``Evaluator`` memoizes each layer across a space, so a 9-variant x 2-node
+sweep extracts each workload once and maps each (workload, sized-arch) pair
+once; only the cheap analytic pricing runs per point. The batched path
+prices all points that share a mapping in one numpy shot.
+
+Pricing deliberately re-reads the device tables (``core.devices``) on every
+call: calibration tools mutate those constants mid-run, so only *structural*
+state (specs / sizing / arch / mapping) is cached unconditionally, while
+``EnergyReport`` caching is opt-out via ``Evaluator(cache_reports=False)``.
+
+The paper's figures/tables are registered in ``SWEEPS`` as declarative
+spaces + row builders; ``core.dse`` keeps the legacy function names as thin
+shims over this registry.
+"""
+from __future__ import annotations
+
+import json
+import math
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.configs.base import ConvLayerSpec, ModelConfig, XRConfig
+from repro.core import area as area_mod
+from repro.core import devices as dev
+from repro.core import nvm as nvm_mod
+from repro.core import workload as wl
+from repro.core.archspec import ArchSpec, apply_variant, get_arch
+from repro.core.dataflow import (map_workload, required_act_kb,
+                                 required_weight_kb, total_traffic)
+from repro.core.energy import EnergyReport, LevelEnergy, price
+from repro.core.space import Bind, DesignPoint, DesignSpace, PAPER_SUITE
+
+# paper §5: application minimum inference rates
+IPS_MIN = {"detnet": 10.0, "edsnet": 0.1}
+# paper §2/§5: per-application required throughputs (from [3, 9])
+IPS_APP = {"detnet": 40.0, "edsnet": 6.0}
+
+NODES_FIG2F = (45, 40, 28, 22, 7)
+PAPER_NODES = (28, 7)
+
+# Activation buffers are capped: beyond this, layers stream row tiles from
+# the frame/line buffers (the pipeline's FA stage, outside the accelerator).
+ACT_CAP_KB = 1024.0
+
+Workload = Union[str, XRConfig, ModelConfig, Sequence[ConvLayerSpec]]
+
+
+def extract_specs(workload: Workload, **kw) -> List[ConvLayerSpec]:
+    """Workload -> layer descriptors (uncached; Evaluator caches this)."""
+    if isinstance(workload, str):
+        from repro.configs import get_config
+        return wl.extract(get_config(workload), **kw)
+    if isinstance(workload, (XRConfig, ModelConfig)):
+        return wl.extract(workload, **kw)
+    return list(workload)
+
+
+def size_arch(arch_name: str, specs: Sequence[ConvLayerSpec],
+              pe_config: str = "v2",
+              full_weight_kb: Optional[float] = None,
+              full_act_kb: Optional[float] = None) -> ArchSpec:
+    """Build the arch with workload-sized buffers (paper Fig 2d method)."""
+    w_kb = full_weight_kb if full_weight_kb else required_weight_kb(specs)
+    a_kb = full_act_kb if full_act_kb else required_act_kb(specs)
+    a_kb = min(a_kb, ACT_CAP_KB)
+    # round up to the bank size to avoid phantom fractional banks
+    w_kb = max(256.0, math.ceil(w_kb / 256.0) * 256.0)
+    a_kb = max(128.0, math.ceil(a_kb / 128.0) * 128.0)
+    if arch_name == "cpu":
+        return get_arch("cpu", weight_kb=w_kb, act_kb=a_kb)
+    return get_arch(arch_name, pe_config=pe_config, weight_kb=w_kb,
+                    act_kb=a_kb)
+
+
+# ---------------------------------------------------------------------------
+# Evaluator
+# ---------------------------------------------------------------------------
+
+
+class Evaluator:
+    """Memoizing evaluator for DesignPoints / DesignSpaces.
+
+    ``cache_reports=False`` keeps only the structural caches (extraction,
+    sizing, arch construction, mapping) — required when device-table
+    constants are being mutated between calls (calibration / grid search),
+    since those only affect pricing.
+    """
+
+    def __init__(self, cache_reports: bool = True):
+        self._cache_reports = cache_reports
+        self._specs: Dict[Tuple, List[ConvLayerSpec]] = {}
+        self._suite: Dict[Tuple[str, ...], Tuple[float, float]] = {}
+        self._archs: Dict[Tuple, ArchSpec] = {}
+        self._maps: Dict[Tuple, list] = {}
+        self._reports: Dict[DesignPoint, EnergyReport] = {}
+        self._areas: Dict[DesignPoint, area_mod.AreaReport] = {}
+        self.stats: Dict[str, List[int]] = {
+            k: [0, 0] for k in ("specs", "suite", "arch", "map", "report",
+                                "area")}
+
+    def _tick(self, cache: str, hit: bool) -> None:
+        self.stats[cache][0 if hit else 1] += 1
+
+    def cache_info(self) -> Dict[str, Tuple[int, int]]:
+        """{cache_name: (hits, misses)}."""
+        return {k: tuple(v) for k, v in self.stats.items()}
+
+    # --- structural layers (always cached) ---------------------------------
+    def specs(self, workload: Workload,
+              extract_kw: Tuple[Tuple[str, Any], ...] = ()
+              ) -> List[ConvLayerSpec]:
+        key = (workload if not isinstance(workload, list) else tuple(workload),
+               tuple(extract_kw))
+        hit = key in self._specs
+        self._tick("specs", hit)
+        if not hit:
+            self._specs[key] = extract_specs(workload, **dict(extract_kw))
+        return self._specs[key]
+
+    def suite_sizes(self, suite: Sequence[str] = PAPER_SUITE
+                    ) -> Tuple[float, float]:
+        """(weight_kb, act_kb) sized for the max over the workload suite."""
+        key = tuple(suite)
+        hit = key in self._suite
+        self._tick("suite", hit)
+        if not hit:
+            all_specs = [self.specs(w) for w in key]
+            w_kb = max(required_weight_kb(s) for s in all_specs)
+            a_kb = min(ACT_CAP_KB, max(required_act_kb(s) for s in all_specs))
+            self._suite[key] = (w_kb, a_kb)
+        return self._suite[key]
+
+    def _sizing(self, point: DesignPoint) -> Tuple[Optional[float],
+                                                   Optional[float]]:
+        """Buffer sizing for the point: suite max (one-silicon method) when
+        the workload is a named member of the point's suite, else None (size
+        for the workload alone)."""
+        if (point.suite and isinstance(point.workload, str)
+                and point.workload in point.suite):
+            return self.suite_sizes(point.suite)
+        return (None, None)
+
+    def base_arch(self, point: DesignPoint) -> ArchSpec:
+        """Sized, SRAM-technology arch for the point (variant not applied)."""
+        w_kb, a_kb = self._sizing(point)
+        if w_kb is None:
+            specs = self.specs(point.workload, point.extract_kw)
+            key = (point.arch, point.pe_config, point.workload_key())
+        else:
+            specs = ()
+            key = (point.arch, point.pe_config, w_kb, a_kb)
+        hit = key in self._archs
+        self._tick("arch", hit)
+        if not hit:
+            self._archs[key] = size_arch(point.arch, specs, point.pe_config,
+                                         full_weight_kb=w_kb,
+                                         full_act_kb=a_kb)
+        return self._archs[key]
+
+    def accesses(self, point: DesignPoint,
+                 base: Optional[ArchSpec] = None) -> list:
+        """Mapped access counts — variant/node-independent, cached per
+        (workload, sized arch)."""
+        base = base or self.base_arch(point)
+        key = (point.workload_key(), base)
+        hit = key in self._maps
+        self._tick("map", hit)
+        if not hit:
+            specs = self.specs(point.workload, point.extract_kw)
+            self._maps[key] = map_workload(specs, base)
+        return self._maps[key]
+
+    # --- pricing -----------------------------------------------------------
+    @staticmethod
+    def _resolve_nvm(point: DesignPoint, default: str = "stt") -> str:
+        return point.nvm or dev.PAPER_NVM_AT_NODE.get(point.node, default)
+
+    def report(self, point: DesignPoint) -> EnergyReport:
+        """Full per-point path: cached extraction/sizing/mapping + pricing."""
+        if self._cache_reports and point in self._reports:
+            self._tick("report", True)
+            return self._reports[point]
+        self._tick("report", False)
+        base = self.base_arch(point)
+        accesses = self.accesses(point, base)
+        nvm = self._resolve_nvm(point)
+        arch = apply_variant(base, point.variant, nvm)
+        rep = price(accesses, arch, point.node, point.workload_name,
+                    point.variant, nvm)
+        if self._cache_reports:
+            self._reports[point] = rep
+        return rep
+
+    def area(self, point: DesignPoint) -> area_mod.AreaReport:
+        if self._cache_reports and point in self._areas:
+            self._tick("area", True)
+            return self._areas[point]
+        self._tick("area", False)
+        base = self.base_arch(point)
+        nvm = self._resolve_nvm(point, default="vgsot")
+        arch = apply_variant(base, point.variant, nvm)
+        rep = area_mod.area(arch, point.node, point.variant)
+        if self._cache_reports:
+            self._areas[point] = rep
+        return rep
+
+    def evaluate(self, points: Iterable[DesignPoint],
+                 batched: bool = True) -> "ResultSet":
+        """Evaluate a space; with ``batched`` the analytic cost model is
+        vectorized over all points sharing a mapping (numpy, one shot per
+        (workload, arch) group)."""
+        pts = list(points)
+        name = getattr(points, "name", "results")
+        if not batched:
+            return ResultSet([(p, self.report(p)) for p in pts], name=name)
+        out: Dict[DesignPoint, EnergyReport] = {}
+        groups: "OrderedDict[Tuple, Tuple[ArchSpec, List[DesignPoint]]]" = \
+            OrderedDict()
+        for p in pts:
+            if self._cache_reports and p in self._reports:
+                self._tick("report", True)
+                out[p] = self._reports[p]
+                continue
+            self._tick("report", False)
+            base = self.base_arch(p)
+            key = (p.workload_key(), base)
+            groups.setdefault(key, (base, []))[1].append(p)
+        for (wkey, _), (base, members) in groups.items():
+            accesses = self.accesses(members[0], base)
+            reports = _price_batch(accesses, base, members)
+            for p, rep in zip(members, reports):
+                out[p] = rep
+                if self._cache_reports:
+                    self._reports[p] = rep
+        return ResultSet([(p, out[p]) for p in pts], name=name)
+
+    def areas(self, points: Iterable[DesignPoint]) -> "ResultSet":
+        name = getattr(points, "name", "areas")
+        return ResultSet([(p, self.area(p)) for p in points], name=name)
+
+
+def _price_batch(accesses: list, base: ArchSpec,
+                 points: Sequence[DesignPoint]) -> List[EnergyReport]:
+    """Vectorized ``energy.price`` over points sharing one mapping.
+
+    Access counts are fixed by the mapping; node scale and per-level device
+    multipliers vary per point. All (P, L) arrays are priced in one numpy
+    shot, then unpacked into the same ``EnergyReport`` structure the scalar
+    path produces (identical formulas — the parity test holds them to 1e-9).
+    """
+    traffic = total_traffic(accesses)
+    levels = [l for l in base.levels if l.name in traffic]
+    macs = sum(a.macs for a in accesses)
+    dmacs = sum(a.delivery_macs for a in accesses)
+    compute_cycles = sum(a.compute_cycles for a in accesses)
+    is_cpu = base.dataflow == "sequential"
+    from repro.core import dataflow as dfl
+
+    P, L = len(points), len(levels)
+    read_bits = np.array([traffic[l.name].read_bits for l in levels])
+    write_bits = np.array([traffic[l.name].write_bits for l in levels])
+    macro_kb = np.array([l.macro_kb for l in levels])
+    cap_kb = np.array([l.capacity_kb for l in levels])
+    bus = np.array([float(l.bus_bits) for l in levels])
+    port = np.array([1.0 if l.cls == "weight" else dev.ACT_PORT_LEAK_MULT
+                     for l in levels])
+    cf = np.array([dev.cell_energy_fraction(k) for k in macro_kb])
+    e45 = (dev.SRAM_E_BASE_PJ_BIT
+           + dev.SRAM_E_SQRT_PJ_BIT * np.sqrt(np.maximum(macro_kb, 1.0)))
+
+    scale = np.array([dev.NODE_ENERGY_SCALE[p.node] for p in points])
+    clock = np.array([dev.clock_ghz(p.node, base.clock_class) * 1e9
+                      for p in points])
+    nvms = [Evaluator._resolve_nvm(p) for p in points]
+    techs: List[List[str]] = []
+    for p, nvm in zip(points, nvms):
+        if p.variant == "sram":
+            techs.append([l.tech for l in levels])
+        elif p.variant == "p0":
+            techs.append([nvm if l.cls == "weight" else l.tech
+                          for l in levels])
+        elif p.variant == "p1":
+            techs.append([nvm] * L)
+        else:
+            raise ValueError(p.variant)
+    dv = [[dev.DEVICES[t] for t in row] for row in techs]
+    rm = np.array([[d.read_mult for d in row] for row in dv])
+    wm = np.array([[d.write_mult for d in row] for row in dv])
+    lm = np.array([[d.leak_mult for d in row] for row in dv])
+    rc = np.array([[float(d.read_cycles) for d in row] for row in dv])
+    wc = np.array([[float(d.write_cycles) for d in row] for row in dv])
+
+    base_e = e45[None, :] * scale[:, None]            # sram pj/bit (P, L)
+    er = base_e * ((1.0 - cf) + cf * rm)
+    ew = base_e * ((1.0 - cf) + cf * wm)
+    read_pj = read_bits[None, :] * er
+    write_pj = write_bits[None, :] * ew
+    leak_base = (dev.SRAM_LEAK_UW_PER_KB_45 * cap_kb[None, :]
+                 * scale[:, None] * port[None, :] * 1e-6)
+    standby = leak_base * lm
+    read_power = er * 1e-12 * bus[None, :] * clock[:, None]
+    cycles = (read_bits[None, :] / bus[None, :] * rc
+              + write_bits[None, :] / bus[None, :] * wc)
+
+    mac_pj = (dev.MAC_INT8_PJ_45
+              + (dev.CPU_OP_OVERHEAD_PJ_45 if is_cpu else 0.0)) * scale
+    dpj45 = (dfl.CPU_DELIVERY_PJ_PER_MAC_45 if is_cpu
+             else dfl.DELIVERY_PJ_PER_MAC_45)
+
+    reports = []
+    for i, p in enumerate(points):
+        lev: Dict[str, LevelEnergy] = {}
+        for j, l in enumerate(levels):
+            lev[l.name] = LevelEnergy(
+                float(read_pj[i, j]), float(write_pj[i, j]),
+                float(standby[i, j]), techs[i][j], l.cls,
+                float(read_power[i, j]), float(leak_base[i, j]))
+        if L and cycles[i].max() > compute_cycles:
+            jmax = int(cycles[i].argmax())
+            bottleneck, cyc = levels[jmax].name, float(cycles[i, jmax])
+        else:
+            bottleneck, cyc = "compute", compute_cycles
+        reports.append(EnergyReport(
+            base.name, p.variant, nvms[i], p.node, p.workload_name, macs,
+            float(macs * mac_pj[i]), float(dmacs * dpj45 * scale[i]), lev,
+            float(cyc / clock[i]), compute_cycles, bottleneck))
+    return reports
+
+
+# ---------------------------------------------------------------------------
+# ResultSet
+# ---------------------------------------------------------------------------
+
+Metric = Union[str, Callable[[DesignPoint, Any], float]]
+
+
+def pmem_at(ips: float) -> Callable[[DesignPoint, EnergyReport], float]:
+    """Metric: average memory-subsystem power (W) at a fixed inference rate."""
+    return lambda _p, r: nvm_mod.memory_power_w(r, ips)
+
+
+def metric_fn(metric: Metric) -> Callable[[DesignPoint, Any], float]:
+    if callable(metric):
+        return metric
+    return lambda _p, r: float(getattr(r, metric))
+
+
+class ResultSet:
+    """Ordered (DesignPoint, report) pairs with tabulation + frontier helpers."""
+
+    def __init__(self, pairs: Sequence[Tuple[DesignPoint, Any]],
+                 name: str = "results"):
+        self._pairs: List[Tuple[DesignPoint, Any]] = list(pairs)
+        self._by_point: Dict[DesignPoint, Any] = dict(self._pairs)
+        self.name = name
+
+    def __iter__(self):
+        return iter(self._pairs)
+
+    def __len__(self):
+        return len(self._pairs)
+
+    def __getitem__(self, key):
+        if isinstance(key, DesignPoint):
+            return self._by_point[key]
+        return self._pairs[key]
+
+    def points(self) -> List[DesignPoint]:
+        return [p for p, _ in self._pairs]
+
+    def reports(self) -> List[Any]:
+        return [r for _, r in self._pairs]
+
+    # --- tabulation ---------------------------------------------------------
+    @staticmethod
+    def _default_row(p: DesignPoint, r: Any) -> Dict[str, Any]:
+        row = dict(workload=p.workload_name, arch=p.arch, node=p.node,
+                   variant=p.variant, pe_config=p.pe_config)
+        if isinstance(r, EnergyReport):
+            row.update(nvm=r.nvm, energy_uj=r.total_pj / 1e6,
+                       mem_uj=r.mem_pj / 1e6,
+                       latency_ms=r.latency_s * 1e3, edp=r.edp)
+        elif isinstance(r, area_mod.AreaReport):
+            row.update(nvm=p.nvm, total_mm2=r.total_mm2,
+                       memory_mm2=r.memory_mm2, compute_mm2=r.compute_mm2)
+        return row
+
+    def to_rows(self, row_fn: Optional[Callable[[DesignPoint, Any], Dict]]
+                = None) -> List[Dict]:
+        fn = row_fn or self._default_row
+        return [fn(p, r) for p, r in self._pairs]
+
+    def to_json(self, path: Optional[str] = None, **kw) -> str:
+        text = json.dumps(self.to_rows(**kw), indent=1)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    # --- slicing ------------------------------------------------------------
+    def where(self, pred: Callable[[DesignPoint], bool]) -> "ResultSet":
+        return ResultSet([(p, r) for p, r in self._pairs if pred(p)],
+                         name=self.name)
+
+    def groupby(self, *fields: str) -> "OrderedDict[Tuple, ResultSet]":
+        groups: "OrderedDict[Tuple, List]" = OrderedDict()
+        for p, r in self._pairs:
+            key = tuple(getattr(p, f) for f in fields)
+            groups.setdefault(key, []).append((p, r))
+        return OrderedDict((k, ResultSet(v, name=f"{self.name}{list(k)}"))
+                           for k, v in groups.items())
+
+    # --- optimization helpers ----------------------------------------------
+    def best(self, metric: Metric) -> Tuple[DesignPoint, Any]:
+        fn = metric_fn(metric)
+        return min(self._pairs, key=lambda pr: fn(*pr))
+
+    def pareto(self, *metrics: Metric) -> "ResultSet":
+        """Non-dominated subset, all metrics minimized (e.g. ``pareto('edp',
+        pmem_at(10.0))`` or ``pareto('latency_s', 'total_pj')``)."""
+        fns = [metric_fn(m) for m in metrics]
+        vals = [tuple(f(p, r) for f in fns) for p, r in self._pairs]
+        keep = []
+        for i, vi in enumerate(vals):
+            dominated = any(
+                all(vj[k] <= vi[k] for k in range(len(fns)))
+                and any(vj[k] < vi[k] for k in range(len(fns)))
+                for j, vj in enumerate(vals) if j != i)
+            if not dominated:
+                keep.append(self._pairs[i])
+        return ResultSet(keep, name=f"{self.name}:pareto")
+
+
+# ---------------------------------------------------------------------------
+# The paper's sweeps as declarative spaces
+# ---------------------------------------------------------------------------
+
+_DEFAULT_EVALUATOR: Optional[Evaluator] = None
+
+
+def default_evaluator() -> Evaluator:
+    """Shared process-wide evaluator used by the ``dse.*`` shims.
+
+    Reports are NOT cached (calibration tools mutate device tables between
+    calls); the structural caches carry all the reuse that matters.
+    """
+    global _DEFAULT_EVALUATOR
+    if _DEFAULT_EVALUATOR is None:
+        _DEFAULT_EVALUATOR = Evaluator(cache_reports=False)
+    return _DEFAULT_EVALUATOR
+
+
+@dataclass(frozen=True)
+class Sweep:
+    """One paper figure/table: a declarative space + a row builder."""
+    name: str
+    figure: str
+    build_space: Callable[..., DesignSpace]
+    build_rows: Callable[..., List[Dict]]
+
+    def space(self, **kw) -> DesignSpace:
+        return self.build_space(**kw)
+
+    def rows(self, evaluator: Optional[Evaluator] = None, **kw) -> List[Dict]:
+        return self.build_rows(evaluator or default_evaluator(), **kw)
+
+
+SYSTOLICS = ("simba", "eyeriss")
+ALL_ARCHS = ("cpu", "eyeriss", "simba")
+MRAM_DEVICES = ("stt", "sot", "vgsot")
+
+
+# --- Fig 2(f) ---------------------------------------------------------------
+
+def fig2f_space(workloads=PAPER_SUITE) -> DesignSpace:
+    return DesignSpace.product(
+        "fig2f", workload=workloads, arch=ALL_ARCHS, node=NODES_FIG2F,
+        variant="sram",
+    ).where(lambda p: p.node != 40 if p.arch == "cpu" else p.node != 45)
+
+
+def fig2f_rows(ev: Evaluator, workloads=PAPER_SUITE) -> List[Dict]:
+    rs = ev.evaluate(fig2f_space(workloads))
+    return [dict(workload=p.workload_name, arch=p.arch, node=p.node,
+                 energy_uj=r.total_pj / 1e6, latency_ms=r.latency_s * 1e3,
+                 edp=r.edp) for p, r in rs]
+
+
+# --- Fig 3(d) ---------------------------------------------------------------
+
+def fig3d_space(workloads=PAPER_SUITE) -> DesignSpace:
+    return DesignSpace.product(
+        "fig3d", workload=workloads, node=PAPER_NODES, arch=ALL_ARCHS,
+        variant=("sram", "p0", "p1"))
+
+
+def fig3d_rows(ev: Evaluator, workloads=PAPER_SUITE) -> List[Dict]:
+    rs = ev.evaluate(fig3d_space(workloads))
+    return [dict(workload=p.workload_name, node=p.node, arch=p.arch,
+                 variant=p.variant, nvm=r.nvm, energy_uj=r.total_pj / 1e6,
+                 mem_uj=r.mem_pj / 1e6, read_uj=r.mem_read_pj / 1e6,
+                 write_uj=r.mem_write_pj / 1e6,
+                 compute_uj=r.compute_pj / 1e6) for p, r in rs]
+
+
+# --- Fig 4 ------------------------------------------------------------------
+
+def fig4_space(node_pairs=((28, "stt"), (7, "vgsot"))) -> DesignSpace:
+    corners = tuple(Bind(node=n, nvm=d) for n, d in node_pairs)
+    return DesignSpace.product(
+        "fig4", workload=PAPER_SUITE, arch=ALL_ARCHS, corner=corners,
+        variant=("sram", "p0", "p1"))
+
+
+def fig4_rows(ev: Evaluator,
+              node_pairs=((28, "stt"), (7, "vgsot"))) -> List[Dict]:
+    rs = ev.evaluate(fig4_space(node_pairs))
+    return [dict(workload=p.workload_name, arch=p.arch, node=p.node,
+                 variant=p.variant, device=p.nvm,
+                 read_uj=r.mem_read_pj / 1e6, write_uj=r.mem_write_pj / 1e6,
+                 compute_uj=r.compute_pj / 1e6) for p, r in rs]
+
+
+# --- Fig 5 ------------------------------------------------------------------
+
+def fig5_space(workloads=PAPER_SUITE, node: int = 7) -> DesignSpace:
+    base = DesignSpace.product(
+        "fig5:sram", workload=workloads, arch=SYSTOLICS, node=node,
+        variant="sram")
+    mram = DesignSpace.product(
+        "fig5:mram", workload=workloads, arch=SYSTOLICS, variant=("p1", "p0"),
+        nvm=MRAM_DEVICES, node=node)
+    return base + mram
+
+
+def fig5_rows(ev: Evaluator, workloads=PAPER_SUITE, node: int = 7,
+              n_points: int = 25) -> List[Dict]:
+    rs = ev.evaluate(fig5_space(workloads, node))
+    sram = {(p.workload_name, p.arch): r for p, r in rs
+            if p.variant == "sram"}
+    rows = []
+    for p, r in rs:
+        if p.variant == "sram":
+            continue
+        s = sram[(p.workload_name, p.arch)]
+        xo = nvm_mod.crossover_ips(r, s)
+        for i in range(n_points):
+            ips = 10 ** (-2 + 4 * i / (n_points - 1))
+            if ips > r.max_ips:
+                break
+            rows.append(dict(
+                workload=p.workload_name, arch=p.arch, variant=p.variant,
+                device=p.nvm, ips=ips,
+                p_mem_w=nvm_mod.memory_power_w(r, ips),
+                p_sram_w=nvm_mod.memory_power_w(s, ips),
+                crossover_ips=xo))
+    return rows
+
+
+# --- Table 2 ----------------------------------------------------------------
+
+def table2_space(workloads=PAPER_SUITE, node: int = 7) -> DesignSpace:
+    return DesignSpace.product(
+        "table2", arch=SYSTOLICS, variant=("sram", "p0", "p1"),
+        workload=workloads[0], node=node, nvm="vgsot",
+        suite=[tuple(workloads)])
+
+
+def table2_rows(ev: Evaluator, workloads=PAPER_SUITE,
+                node: int = 7) -> List[Dict]:
+    rs = ev.areas(table2_space(workloads, node))
+    rows = []
+    for (arch,), group in rs.groupby("arch").items():
+        reps = {p.variant: r for p, r in group}
+        rows.append(dict(
+            arch=arch,
+            sram_mm2=reps["sram"].total_mm2,
+            p0_mm2=reps["p0"].total_mm2,
+            p1_mm2=reps["p1"].total_mm2,
+            p0_savings=area_mod.savings(reps["p0"], reps["sram"]),
+            p1_savings=area_mod.savings(reps["p1"], reps["sram"])))
+    return rows
+
+
+# --- Table 3 ----------------------------------------------------------------
+
+def table3_space(node: int = 7) -> DesignSpace:
+    return DesignSpace.product(
+        "table3", workload=PAPER_SUITE, arch=SYSTOLICS,
+        variant=("sram", "p0", "p1"), node=node)
+
+
+def table3_rows(ev: Evaluator, node: int = 7) -> List[Dict]:
+    rs = ev.evaluate(table3_space(node))
+    rows = []
+    for (w, a), group in rs.groupby("workload", "arch").items():
+        w = group.points()[0].workload_name
+        reps = {p.variant: r for p, r in group}
+        ips = IPS_MIN[w]
+        out = dict(workload=w, arch=a, ips=ips)
+        for v in ("p0", "p1"):
+            out[f"{v}_latency_ms"] = reps[v].latency_s * 1e3
+            out[f"{v}_savings"] = nvm_mod.savings_at_ips(
+                reps[v], reps["sram"], ips)
+        out["sram_latency_ms"] = reps["sram"].latency_s * 1e3
+        rows.append(out)
+    return rows
+
+
+# --- beyond-paper: edge-LM KV-cache DSE -------------------------------------
+
+def lm_kv_space(arch_names=SYSTOLICS, node: int = 7,
+                context_len: int = 4096,
+                archs=("llama3.2-1b",)) -> DesignSpace:
+    kw = (("context_len", context_len),)
+    base = DesignSpace.product(
+        "lm_kv:sram", workload=archs, arch=arch_names, node=node,
+        variant="sram", extract_kw=[kw], suite=[None])
+    mram = DesignSpace.product(
+        "lm_kv:mram", workload=archs, arch=arch_names, variant=("p0", "p1"),
+        nvm=MRAM_DEVICES, node=node, extract_kw=[kw], suite=[None])
+    return base + mram
+
+
+def lm_kv_rows(ev: Evaluator, arch_names=SYSTOLICS, node: int = 7,
+               context_len: int = 4096,
+               archs=("llama3.2-1b",)) -> List[Dict]:
+    rs = ev.evaluate(lm_kv_space(arch_names, node, context_len, archs))
+    sram = {(p.workload, p.arch): r for p, r in rs if p.variant == "sram"}
+    rows = []
+    for p, r in rs:
+        if p.variant == "sram":
+            continue
+        s = sram[(p.workload, p.arch)]
+        rows.append(dict(
+            model=p.workload, arch=p.arch, variant=p.variant, device=p.nvm,
+            energy_mj=r.total_pj / 1e9,
+            latency_ms=r.latency_s * 1e3,
+            crossover_tok_s=nvm_mod.crossover_ips(r, s),
+            savings_at_10tok_s=nvm_mod.savings_at_ips(
+                r, s, min(10.0, r.max_ips))))
+    return rows
+
+
+SWEEPS: Dict[str, Sweep] = {
+    "fig2f": Sweep("fig2f", "Fig 2(f): EDP vs node, SRAM-only platforms",
+                   fig2f_space, fig2f_rows),
+    "fig3d": Sweep("fig3d", "Fig 3(d): 9 variants x {28,7}nm energy",
+                   fig3d_space, fig3d_rows),
+    "fig4": Sweep("fig4", "Fig 4: read/write/compute breakdown per variant",
+                  fig4_space, fig4_rows),
+    "fig5": Sweep("fig5", "Fig 5: memory power vs IPS, 4 devices, P0/P1",
+                  fig5_space, fig5_rows),
+    "table2": Sweep("table2", "Table 2: area at 7nm, SRAM vs P0 vs P1",
+                    table2_space, table2_rows),
+    "table3": Sweep("table3", "Table 3: P_mem savings + latency at IPS_min",
+                    table3_space, table3_rows),
+    "lm_kv": Sweep("lm_kv", "Beyond-paper: edge-LM KV-cache MRAM DSE",
+                   lm_kv_space, lm_kv_rows),
+}

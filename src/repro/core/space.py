@@ -1,0 +1,214 @@
+"""Declarative design-space description for the paper's experiment matrix.
+
+The DSE plane explores {workload x arch x node x variant x NVM device x PE
+config}. Instead of nested for-loops per figure, a sweep is:
+
+    space = (DesignSpace.product(
+                 "fig2f",
+                 workload=("detnet", "edsnet"),
+                 arch=("cpu", "eyeriss", "simba"),
+                 node=(45, 40, 28, 22, 7))
+             .where(lambda p: p.node != 40 if p.arch == "cpu" else p.node != 45))
+    results = Evaluator().evaluate(space)
+
+Three pieces live here (evaluation lives in ``core.experiment``):
+
+  * ``DesignPoint`` — one frozen, hashable coordinate of the matrix.
+  * ``Bind``        — an axis value that sets SEVERAL point fields at once
+                      (e.g. the paper's (node, device) corners (28, STT) and
+                      (7, VGSOT) vary together, not as a cross product).
+  * ``DesignSpace`` — an ordered, de-duplicated set of points with cartesian
+                      ``product`` construction, ``where`` filters and union.
+
+Iteration order is row-major over the axes in declaration order — exactly
+the nested-loop order of the legacy ``dse.sweep_*`` functions, which is what
+lets the parity tests compare row lists positionally.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, fields, replace
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple, Union)
+
+# The paper's XR design is ONE piece of silicon serving the workload suite;
+# Tables 2-3 size buffers for the max over this suite.
+PAPER_SUITE = ("detnet", "edsnet")
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One coordinate of the design-space matrix.
+
+    ``workload`` is a config name (preferred: hashable + suite-sizing aware)
+    or a frozen ``XRConfig``/``ModelConfig`` instance. ``extract_kw`` holds
+    workload-extraction kwargs (e.g. ``context_len`` for LM decode specs) as
+    a sorted item tuple so the point stays hashable.
+    """
+    workload: Any
+    arch: str
+    node: int
+    variant: str = "sram"
+    nvm: Optional[str] = None          # None -> paper's device at this node
+    pe_config: str = "v2"
+    suite: Optional[Tuple[str, ...]] = PAPER_SUITE
+    extract_kw: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.suite, list):
+            object.__setattr__(self, "suite", tuple(self.suite))
+        if isinstance(self.extract_kw, dict):
+            object.__setattr__(self, "extract_kw",
+                               tuple(sorted(self.extract_kw.items())))
+
+    # --- convenience --------------------------------------------------------
+    def with_(self, **changes) -> "DesignPoint":
+        return replace(self, **changes)
+
+    @property
+    def workload_name(self) -> str:
+        if isinstance(self.workload, str):
+            return self.workload
+        return getattr(self.workload, "name", "custom")
+
+    def workload_key(self) -> Tuple:
+        """Cache key for extraction: config identity + extraction kwargs."""
+        return (self.workload, self.extract_kw)
+
+    def asdict(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+_POINT_FIELDS = {f.name for f in fields(DesignPoint)}
+
+
+class Bind:
+    """Axis value binding several DesignPoint fields together.
+
+    ``corner=(Bind(node=28, nvm="stt"), Bind(node=7, nvm="vgsot"))`` sweeps
+    the two paper corners without crossing node against device.
+    """
+
+    def __init__(self, **kw):
+        unknown = set(kw) - _POINT_FIELDS
+        if unknown:
+            raise TypeError(f"Bind: unknown DesignPoint fields {sorted(unknown)}")
+        self.fields = dict(kw)
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={v!r}" for k, v in self.fields.items())
+        return f"Bind({inner})"
+
+    def __eq__(self, other):
+        return isinstance(other, Bind) and self.fields == other.fields
+
+    def __hash__(self):
+        return hash(tuple(sorted(self.fields.items())))
+
+
+AxisValues = Sequence[Any]
+
+
+def _as_axis(values: Any) -> Tuple[Any, ...]:
+    """Normalize one axis: scalars (incl. strings/configs) become 1-tuples."""
+    if isinstance(values, (str, bytes, int, float, bool, Bind)) or values is None:
+        return (values,)
+    try:
+        return tuple(values)
+    except TypeError:
+        return (values,)
+
+
+class DesignSpace:
+    """Ordered, de-duplicated collection of ``DesignPoint``s with named axes."""
+
+    def __init__(self, points: Iterable[DesignPoint], name: str = "space",
+                 axes: Optional[Dict[str, Tuple[Any, ...]]] = None):
+        seen = set()
+        uniq: List[DesignPoint] = []
+        for p in points:
+            if not isinstance(p, DesignPoint):
+                raise TypeError(f"DesignSpace holds DesignPoints, got {type(p)}")
+            if p not in seen:
+                seen.add(p)
+                uniq.append(p)
+        self._points: Tuple[DesignPoint, ...] = tuple(uniq)
+        self.name = name
+        self.axes: Dict[str, Tuple[Any, ...]] = dict(axes or {})
+
+    # --- construction -------------------------------------------------------
+    @classmethod
+    def product(cls, name: str = "space", **axes: Any) -> "DesignSpace":
+        """Cartesian product over named axes, row-major in declaration order.
+
+        Axis names are ``DesignPoint`` field names; an axis whose values are
+        ``Bind`` objects may use any name (its bound fields are merged in).
+        Scalar axis values (strings, ints, configs) are auto-wrapped.
+        """
+        norm = {k: _as_axis(v) for k, v in axes.items()}
+        for k, vals in norm.items():
+            if k not in _POINT_FIELDS and not all(
+                    isinstance(v, Bind) for v in vals):
+                raise TypeError(
+                    f"axis {k!r} is not a DesignPoint field; non-field axes "
+                    f"must contain only Bind values")
+        points = []
+        for combo in itertools.product(*norm.values()):
+            kw: Dict[str, Any] = {}
+            for axis_name, value in zip(norm, combo):
+                fields = value.fields if isinstance(value, Bind) \
+                    else {axis_name: value}
+                clash = set(fields) & set(kw)
+                if clash:
+                    raise TypeError(
+                        f"axis {axis_name!r} sets fields {sorted(clash)} "
+                        f"already bound by an earlier axis")
+                kw.update(fields)
+            points.append(DesignPoint(**kw))
+        return cls(points, name=name, axes=norm)
+
+    @classmethod
+    def from_points(cls, points: Iterable[DesignPoint],
+                    name: str = "space") -> "DesignSpace":
+        return cls(points, name=name)
+
+    # --- algebra ------------------------------------------------------------
+    def where(self, *predicates: Callable[[DesignPoint], bool]) -> "DesignSpace":
+        pts = [p for p in self._points if all(pred(p) for pred in predicates)]
+        return DesignSpace(pts, name=self.name, axes=self.axes)
+
+    def map(self, fn: Callable[[DesignPoint], DesignPoint]) -> "DesignSpace":
+        return DesignSpace([fn(p) for p in self._points], name=self.name)
+
+    def __add__(self, other: "DesignSpace") -> "DesignSpace":
+        return DesignSpace(self._points + tuple(other),
+                           name=f"{self.name}+{other.name}")
+
+    # --- container protocol -------------------------------------------------
+    def __iter__(self) -> Iterator[DesignPoint]:
+        return iter(self._points)
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def __getitem__(self, i) -> Union[DesignPoint, Tuple[DesignPoint, ...]]:
+        return self._points[i]
+
+    def __contains__(self, p: DesignPoint) -> bool:
+        return p in set(self._points)
+
+    def __repr__(self):
+        ax = ", ".join(f"{k}[{len(v)}]" for k, v in self.axes.items())
+        return f"DesignSpace({self.name!r}, {len(self)} points, axes: {ax})"
+
+    def axis(self, name: str) -> Tuple[Any, ...]:
+        """Distinct values actually present for a point field, in order.
+        Non-field (Bind) axis names return their declared values."""
+        if name not in _POINT_FIELDS:
+            if name in self.axes:
+                return self.axes[name]
+            raise KeyError(name)
+        seen: Dict[Any, None] = {}
+        for p in self._points:
+            seen.setdefault(getattr(p, name))
+        return tuple(seen)

@@ -1,0 +1,14 @@
+"""jax-version compat for pallas TPU symbols.
+
+The TPU compiler-params class is ``TPUCompilerParams`` in jax<=0.4.x and
+``CompilerParams`` in newer releases; kernels import the name from here so
+they follow the current API on either toolchain.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels._compat for this jax")

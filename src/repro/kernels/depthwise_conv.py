@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(x0_ref, x1_ref, x2_ref, w_ref, o_ref, *, wout: int):
     rows = (x0_ref, x1_ref, x2_ref)
@@ -55,7 +57,7 @@ def depthwise_conv3x3_padded(x_pad: jax.Array, w: jax.Array, *,
                   pl.BlockSpec((3, 3, bc), lambda b, i, c: (0, 0, c))],
         out_specs=pl.BlockSpec((1, th, W, bc), lambda b, i, c: (b, i, 0, c)),
         out_shape=jax.ShapeDtypeStruct((B, H, W, C), x_pad.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x0, x1, x2, w)

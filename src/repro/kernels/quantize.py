@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -37,7 +39,7 @@ def quantize_rows(x: jax.Array, *, bm: int = 256,
                    pl.BlockSpec((bm,), lambda i: (i,))),
         out_shape=(jax.ShapeDtypeStruct((M, N), jnp.int8),
                    jax.ShapeDtypeStruct((M,), jnp.float32)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

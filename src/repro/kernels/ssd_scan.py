@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(states_ref, decay_ref, out_ref, s_ref):
     @pl.when(pl.program_id(1) == 0)
@@ -47,7 +49,7 @@ def ssd_chunk_scan(states: jax.Array, decay: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, P, N), lambda b, c: (b, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, NC, P, N), states.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(sf, df)

@@ -98,7 +98,9 @@ def resolve_spec(logical: Sequence[Optional[str]]) -> P:
         else:
             kept = tuple(x for x in m if x not in used)
             used.update(kept)
-            out.append(kept if kept else None)
+            # a 1-tuple means the same sharding as the bare axis name, but
+            # newer jax PartitionSpec no longer compares them equal
+            out.append(kept[0] if len(kept) == 1 else (kept if kept else None))
     return P(*out)
 
 

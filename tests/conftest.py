@@ -1,9 +1,23 @@
 import os
+import sys
+
+# Make `import repro` work without the PYTHONPATH=src invocation hack
+# (pip install -e . also works; this keeps bare `pytest -x -q` viable).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # Smoke tests / benches see the single real CPU device. ONLY the dry-run
 # launcher (repro.launch.dryrun) forces 512 host devices — never set that
 # flag here.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Offline container: run property tests against a deterministic sample
+    # instead of dying at collection (see repro.testing.hypolite).
+    from repro.testing import hypolite
+
+    sys.modules["hypothesis"] = hypolite
 
 import numpy as np
 import pytest

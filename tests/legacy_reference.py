@@ -1,0 +1,208 @@
+"""Verbatim copy of the SEED nested-loop DSE pipeline (pre-DesignSpace).
+
+This is the reference the parity suite in ``test_space.py`` compares the
+declarative ``DesignSpace``/``Evaluator`` sweeps against. It calls the raw
+core modules directly with no caching, exactly as ``core.dse`` did before
+the experiment API existed. Do not "modernize" this file — its value is
+being frozen.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.configs.base import ConvLayerSpec, ModelConfig, XRConfig
+from repro.core import area as area_mod
+from repro.core import devices as dev
+from repro.core import nvm as nvm_mod
+from repro.core import workload as wl
+from repro.core.archspec import ArchSpec, apply_variant, get_arch
+from repro.core.dataflow import (map_workload, required_act_kb,
+                                 required_weight_kb)
+from repro.core.energy import EnergyReport, price
+
+IPS_MIN = {"detnet": 10.0, "edsnet": 0.1}
+NODES_FIG2F = (45, 40, 28, 22, 7)
+PAPER_NODES = (28, 7)
+ACT_CAP_KB = 1024.0
+PAPER_SUITE = ("detnet", "edsnet")
+
+
+def _specs(workload: Union[str, XRConfig, ModelConfig, Sequence[ConvLayerSpec]],
+           **kw) -> List[ConvLayerSpec]:
+    if isinstance(workload, str):
+        from repro.configs import get_config
+        return wl.extract(get_config(workload), **kw)
+    if isinstance(workload, (XRConfig, ModelConfig)):
+        return wl.extract(workload, **kw)
+    return list(workload)
+
+
+def size_arch(arch_name: str, specs: Sequence[ConvLayerSpec],
+              pe_config: str = "v2",
+              full_weight_kb: Optional[float] = None,
+              full_act_kb: Optional[float] = None) -> ArchSpec:
+    w_kb = full_weight_kb if full_weight_kb else required_weight_kb(specs)
+    a_kb = full_act_kb if full_act_kb else required_act_kb(specs)
+    a_kb = min(a_kb, ACT_CAP_KB)
+    w_kb = max(256.0, math.ceil(w_kb / 256.0) * 256.0)
+    a_kb = max(128.0, math.ceil(a_kb / 128.0) * 128.0)
+    if arch_name == "cpu":
+        return get_arch("cpu", weight_kb=w_kb, act_kb=a_kb)
+    return get_arch(arch_name, pe_config=pe_config, weight_kb=w_kb,
+                    act_kb=a_kb)
+
+
+def suite_sizes(suite=PAPER_SUITE) -> tuple:
+    all_specs = [_specs(w) for w in suite]
+    w_kb = max(required_weight_kb(s) for s in all_specs)
+    a_kb = min(ACT_CAP_KB, max(required_act_kb(s) for s in all_specs))
+    return w_kb, a_kb
+
+
+def evaluate(workload, arch_name: str, node: int, variant: str = "sram",
+             nvm: Optional[str] = None, pe_config: str = "v2",
+             suite=PAPER_SUITE, **kw) -> EnergyReport:
+    specs = _specs(workload, **kw)
+    if suite and isinstance(workload, str) and workload in suite:
+        w_kb, a_kb = suite_sizes(suite)
+        base = size_arch(arch_name, specs, pe_config,
+                         full_weight_kb=w_kb, full_act_kb=a_kb)
+    else:
+        base = size_arch(arch_name, specs, pe_config)
+    nvm = nvm or dev.PAPER_NVM_AT_NODE.get(node, "stt")
+    arch = apply_variant(base, variant, nvm)
+    accesses = map_workload(specs, arch)
+    name = workload if isinstance(workload, str) else getattr(
+        workload, "name", "custom")
+    return price(accesses, arch, node, name, variant, nvm)
+
+
+def sweep_fig2f(workloads=("detnet", "edsnet")) -> List[Dict]:
+    rows = []
+    for w in workloads:
+        for a in ("cpu", "eyeriss", "simba"):
+            for node in NODES_FIG2F:
+                if a == "cpu" and node == 40:
+                    continue
+                if a != "cpu" and node == 45:
+                    continue
+                r = evaluate(w, a, node, "sram")
+                rows.append(dict(workload=w, arch=a, node=node,
+                                 energy_uj=r.total_pj / 1e6,
+                                 latency_ms=r.latency_s * 1e3,
+                                 edp=r.edp))
+    return rows
+
+
+def sweep_fig3d(workloads=("detnet", "edsnet")) -> List[Dict]:
+    rows = []
+    for w in workloads:
+        for node in PAPER_NODES:
+            for a in ("cpu", "eyeriss", "simba"):
+                for v in ("sram", "p0", "p1"):
+                    r = evaluate(w, a, node, v)
+                    rows.append(dict(
+                        workload=w, node=node, arch=a, variant=v, nvm=r.nvm,
+                        energy_uj=r.total_pj / 1e6,
+                        mem_uj=r.mem_pj / 1e6,
+                        read_uj=r.mem_read_pj / 1e6,
+                        write_uj=r.mem_write_pj / 1e6,
+                        compute_uj=r.compute_pj / 1e6))
+    return rows
+
+
+def sweep_fig5(workloads=("detnet", "edsnet"), node: int = 7,
+               n_points: int = 25) -> List[Dict]:
+    rows = []
+    for w in workloads:
+        for a in ("simba", "eyeriss"):
+            sram = evaluate(w, a, node, "sram")
+            for v in ("p1", "p0"):
+                for d in ("stt", "sot", "vgsot"):
+                    r = evaluate(w, a, node, v, nvm=d)
+                    xo = nvm_mod.crossover_ips(r, sram)
+                    for i in range(n_points):
+                        ips = 10 ** (-2 + 4 * i / (n_points - 1))
+                        if ips > r.max_ips:
+                            break
+                        rows.append(dict(
+                            workload=w, arch=a, variant=v, device=d, ips=ips,
+                            p_mem_w=nvm_mod.memory_power_w(r, ips),
+                            p_sram_w=nvm_mod.memory_power_w(sram, ips),
+                            crossover_ips=xo))
+    return rows
+
+
+def table2_area(workloads=("detnet", "edsnet"), node: int = 7) -> List[Dict]:
+    rows = []
+    for a in ("simba", "eyeriss"):
+        wkb, akb = suite_sizes(workloads)
+        base = size_arch(a, _specs(workloads[0]), "v2",
+                         full_weight_kb=wkb, full_act_kb=akb)
+        reps = {}
+        for v in ("sram", "p0", "p1"):
+            arch = apply_variant(base, v, "vgsot")
+            reps[v] = area_mod.area(arch, node, v)
+        rows.append(dict(
+            arch=a,
+            sram_mm2=reps["sram"].total_mm2,
+            p0_mm2=reps["p0"].total_mm2,
+            p1_mm2=reps["p1"].total_mm2,
+            p0_savings=area_mod.savings(reps["p0"], reps["sram"]),
+            p1_savings=area_mod.savings(reps["p1"], reps["sram"])))
+    return rows
+
+
+def table3_ips(node: int = 7) -> List[Dict]:
+    rows = []
+    for w in ("detnet", "edsnet"):
+        ips = IPS_MIN[w]
+        for a in ("simba", "eyeriss"):
+            sram = evaluate(w, a, node, "sram")
+            out = dict(workload=w, arch=a, ips=ips)
+            for v in ("p0", "p1"):
+                r = evaluate(w, a, node, v)
+                out[f"{v}_latency_ms"] = r.latency_s * 1e3
+                out[f"{v}_savings"] = nvm_mod.savings_at_ips(r, sram, ips)
+            out["sram_latency_ms"] = sram.latency_s * 1e3
+            rows.append(out)
+    return rows
+
+
+def fig4_breakdown(node_pairs=((28, "stt"), (7, "vgsot"))) -> List[Dict]:
+    rows = []
+    for w in ("detnet", "edsnet"):
+        for a in ("cpu", "eyeriss", "simba"):
+            for node, d in node_pairs:
+                for v in ("sram", "p0", "p1"):
+                    r = evaluate(w, a, node, v, nvm=d)
+                    rows.append(dict(
+                        workload=w, arch=a, node=node, variant=v, device=d,
+                        read_uj=r.mem_read_pj / 1e6,
+                        write_uj=r.mem_write_pj / 1e6,
+                        compute_uj=r.compute_pj / 1e6))
+    return rows
+
+
+def lm_kv_dse(arch_names=("simba", "eyeriss"), node: int = 7,
+              context_len: int = 4096, archs=("llama3.2-1b",)) -> List[Dict]:
+    from repro.configs import get_config
+    rows = []
+    for model in archs:
+        cfg = get_config(model)
+        for a in arch_names:
+            sram = evaluate(cfg, a, node, "sram", context_len=context_len)
+            for v in ("p0", "p1"):
+                for d in ("stt", "sot", "vgsot"):
+                    r = evaluate(cfg, a, node, v, nvm=d,
+                                 context_len=context_len)
+                    xo = nvm_mod.crossover_ips(r, sram)
+                    rows.append(dict(
+                        model=model, arch=a, variant=v, device=d,
+                        energy_mj=r.total_pj / 1e9,
+                        latency_ms=r.latency_s * 1e3,
+                        crossover_tok_s=xo,
+                        savings_at_10tok_s=nvm_mod.savings_at_ips(
+                            r, sram, min(10.0, r.max_ips))))
+    return rows

@@ -1,0 +1,265 @@
+"""Experiment-API tests: DesignSpace mechanics, Evaluator caching, batched
+pricing, ResultSet helpers, and row-level parity of every declarative paper
+sweep against the frozen seed implementation (``legacy_reference``)."""
+import math
+
+import pytest
+
+import legacy_reference as legacy
+from repro.core import devices as dev
+from repro.core import dse
+from repro.core import experiment as xp
+from repro.core.space import Bind, DesignPoint, DesignSpace
+
+
+def assert_rows_equal(new_rows, ref_rows, rel=1e-9):
+    assert len(new_rows) == len(ref_rows)
+    for i, (n, r) in enumerate(zip(new_rows, ref_rows)):
+        assert set(n) == set(r), (i, set(n) ^ set(r))
+        for k in r:
+            vn, vr = n[k], r[k]
+            if isinstance(vr, float) and vn is not None and vr is not None:
+                assert math.isclose(vn, vr, rel_tol=rel, abs_tol=1e-15), \
+                    (i, k, vn, vr)
+            else:
+                assert vn == vr, (i, k, vn, vr)
+
+
+# ---------------------------------------------------------------------------
+# parity: every declarative sweep reproduces the seed rows exactly
+# ---------------------------------------------------------------------------
+
+def test_parity_fig2f():
+    assert_rows_equal(dse.sweep_fig2f(), legacy.sweep_fig2f())
+
+
+def test_parity_fig3d():
+    assert_rows_equal(dse.sweep_fig3d(), legacy.sweep_fig3d())
+
+
+def test_parity_fig4():
+    assert_rows_equal(dse.fig4_breakdown(), legacy.fig4_breakdown())
+
+
+def test_parity_fig5():
+    assert_rows_equal(dse.sweep_fig5(n_points=9),
+                      legacy.sweep_fig5(n_points=9))
+
+
+def test_parity_table2():
+    assert_rows_equal(dse.table2_area(), legacy.table2_area())
+
+
+def test_parity_table3():
+    assert_rows_equal(dse.table3_ips(), legacy.table3_ips())
+
+
+def test_parity_lm_kv_dse():
+    assert_rows_equal(dse.lm_kv_dse(arch_names=("simba",)),
+                      legacy.lm_kv_dse(arch_names=("simba",)))
+
+
+def test_parity_evaluate_single_point():
+    for v in ("sram", "p0", "p1"):
+        a = dse.evaluate("detnet", "simba", 7, v)
+        b = legacy.evaluate("detnet", "simba", 7, v)
+        assert math.isclose(a.total_pj, b.total_pj, rel_tol=1e-12)
+        assert math.isclose(a.latency_s, b.latency_s, rel_tol=1e-12)
+        assert a.bottleneck == b.bottleneck and a.nvm == b.nvm
+
+
+# ---------------------------------------------------------------------------
+# DesignSpace mechanics
+# ---------------------------------------------------------------------------
+
+def test_product_row_major_order_and_len():
+    s = DesignSpace.product("s", workload=("detnet", "edsnet"),
+                            arch=("cpu", "simba"), node=(28, 7))
+    assert len(s) == 8
+    assert [(p.workload, p.arch, p.node) for p in s][:3] == [
+        ("detnet", "cpu", 28), ("detnet", "cpu", 7), ("detnet", "simba", 28)]
+
+
+def test_product_scalar_axes_auto_wrap():
+    s = DesignSpace.product("s", workload="detnet", arch="simba", node=7,
+                            variant=("sram", "p0"))
+    assert len(s) == 2
+    assert all(p.workload == "detnet" and p.arch == "simba" for p in s)
+
+
+def test_where_filters_and_keeps_order():
+    s = DesignSpace.product("s", workload="detnet",
+                            arch=("cpu", "eyeriss", "simba"),
+                            node=(45, 40, 7))
+    f = s.where(lambda p: p.node != 40 if p.arch == "cpu" else p.node != 45)
+    assert len(f) == 6
+    assert all(not (p.arch == "cpu" and p.node == 40) for p in f)
+    assert all(not (p.arch != "cpu" and p.node == 45) for p in f)
+
+
+def test_bind_axis_merges_fields():
+    s = DesignSpace.product(
+        "s", workload="detnet", arch="simba",
+        corner=(Bind(node=28, nvm="stt"), Bind(node=7, nvm="vgsot")))
+    assert [(p.node, p.nvm) for p in s] == [(28, "stt"), (7, "vgsot")]
+
+
+def test_bind_rejects_unknown_field():
+    with pytest.raises(TypeError):
+        Bind(nonsense=1)
+
+
+def test_bind_conflicting_with_field_axis_rejected():
+    with pytest.raises(TypeError):
+        DesignSpace.product("s", workload="detnet", arch="simba",
+                            node=(28, 7), corner=(Bind(node=5, nvm="stt"),))
+
+
+def test_non_field_axis_without_bind_rejected():
+    with pytest.raises(TypeError):
+        DesignSpace.product("s", workload="detnet", arch="simba", node=7,
+                            bogus=(1, 2))
+
+
+def test_union_dedups_preserving_order():
+    a = DesignSpace.product("a", workload="detnet", arch="simba",
+                            node=(28, 7))
+    b = DesignSpace.product("b", workload="detnet", arch="simba",
+                            node=(7, 22))
+    u = a + b
+    assert [p.node for p in u] == [28, 7, 22]
+
+
+def test_axis_values():
+    s = xp.fig3d_space()
+    assert s.axis("variant") == ("sram", "p0", "p1")
+    assert s.axis("node") == (28, 7)
+
+
+def test_axis_reflects_where_filter():
+    s = xp.fig2f_space().where(lambda p: p.arch != "cpu")
+    assert s.axis("arch") == ("eyeriss", "simba")
+    assert xp.fig4_space().axis("corner") == xp.fig4_space().axes["corner"]
+
+
+# ---------------------------------------------------------------------------
+# Evaluator caching
+# ---------------------------------------------------------------------------
+
+def test_specs_extracted_once_across_space():
+    ev = xp.Evaluator()
+    ev.evaluate(xp.fig3d_space())
+    hits, misses = ev.cache_info()["specs"]
+    assert misses == 2                     # detnet + edsnet, once each
+    assert hits > 0
+
+
+def test_mapping_shared_across_variants_and_nodes():
+    ev = xp.Evaluator()
+    ev.evaluate(xp.fig3d_space())          # 2 workloads x 3 archs x 3 x 2
+    hits, misses = ev.cache_info()["map"]
+    assert misses == 6                     # one mapping per (workload, arch)
+
+
+def test_report_cache_hits_on_reevaluation():
+    ev = xp.Evaluator()
+    p = DesignPoint("detnet", "simba", 7, "p1")
+    r1 = ev.report(p)
+    r2 = ev.report(p)
+    assert r1 is r2
+    assert ev.cache_info()["report"] == (1, 1)
+
+
+def test_cache_reports_false_reprices_after_device_mutation():
+    ev = xp.Evaluator(cache_reports=False)
+    p = DesignPoint("detnet", "simba", 7, "p1", nvm="vgsot")
+    before = ev.report(p).mem_pj
+    saved = dev.DEVICES["vgsot"]
+    try:
+        dev.DEVICES["vgsot"] = dev.MemDevice("vgsot", 4.0, 4.0, 0.0, 1 / 2.3,
+                                             1, 2, True)
+        after = ev.report(p).mem_pj
+    finally:
+        dev.DEVICES["vgsot"] = saved
+    assert after > before                  # structural caches kept, price fresh
+    assert ev.cache_info()["map"] == (1, 1)
+
+
+def test_batched_matches_scalar_path():
+    space = xp.fig3d_space() + xp.fig2f_space()
+    scalar = xp.Evaluator().evaluate(space, batched=False)
+    batched = xp.Evaluator().evaluate(space, batched=True)
+    for (p1, r1), (p2, r2) in zip(scalar, batched):
+        assert p1 == p2
+        assert math.isclose(r1.total_pj, r2.total_pj, rel_tol=1e-9)
+        assert math.isclose(r1.latency_s, r2.latency_s, rel_tol=1e-9)
+        assert math.isclose(r1.standby_w, r2.standby_w, rel_tol=1e-9)
+        assert r1.bottleneck == r2.bottleneck
+        assert r1.nvm == r2.nvm and r1.levels.keys() == r2.levels.keys()
+
+
+# ---------------------------------------------------------------------------
+# ResultSet helpers
+# ---------------------------------------------------------------------------
+
+def test_resultset_groupby_and_best():
+    ev = xp.Evaluator()
+    rs = ev.evaluate(xp.table3_space())
+    groups = rs.groupby("workload", "arch")
+    assert len(groups) == 4
+    assert all(len(g) == 3 for g in groups.values())
+    p, _ = rs.best("edp")
+    assert p.arch in ("simba", "eyeriss")
+
+
+def test_resultset_pareto_frontier():
+    ev = xp.Evaluator()
+    rs = ev.evaluate(xp.fig3d_space().where(lambda p: p.node == 7,
+                                            lambda p: p.workload == "detnet"))
+    front = rs.pareto("edp", xp.pmem_at(10.0))
+    assert 0 < len(front) <= len(rs)
+    # the global minimum of each metric always survives
+    assert rs.best("edp")[0] in [p for p, _ in front]
+    fvals = [(r.edp, xp.pmem_at(10.0)(p, r)) for p, r in front]
+    for i, a in enumerate(fvals):          # no frontier member dominates another
+        for j, b in enumerate(fvals):
+            if i != j:
+                assert not (b[0] <= a[0] and b[1] <= a[1]
+                            and (b[0] < a[0] or b[1] < a[1]))
+
+
+def test_resultset_rows_and_json():
+    ev = xp.Evaluator()
+    rs = ev.evaluate(xp.table3_space().where(lambda p: p.arch == "simba"))
+    rows = rs.to_rows()
+    assert len(rows) == len(rs)
+    assert {"workload", "arch", "node", "variant", "energy_uj",
+            "edp"} <= set(rows[0])
+    text = rs.to_json()
+    import json
+    assert json.loads(text) == rows
+
+
+# ---------------------------------------------------------------------------
+# evaluate_area suite consistency (one-silicon-design method)
+# ---------------------------------------------------------------------------
+
+def test_evaluate_area_uses_suite_sizing_by_default():
+    a_det = dse.evaluate_area("detnet", "simba")
+    a_eds = dse.evaluate_area("edsnet", "simba")
+    # one piece of silicon serves the suite: identical buffers, same area
+    assert math.isclose(a_det.total_mm2, a_eds.total_mm2, rel_tol=1e-12)
+
+
+def test_evaluate_area_suite_none_sizes_alone():
+    alone = dse.evaluate_area("detnet", "simba", suite=None)
+    suite = dse.evaluate_area("detnet", "simba")
+    # EDSNet dominates the suite act sizing, so the suite design is bigger
+    assert alone.total_mm2 < suite.total_mm2
+
+
+def test_evaluate_area_matches_table2_sram_cell():
+    rep = dse.evaluate_area("detnet", "simba", node=7, variant="sram",
+                            nvm="vgsot")
+    t2 = {r["arch"]: r for r in dse.table2_area()}
+    assert math.isclose(rep.total_mm2, t2["simba"]["sram_mm2"], rel_tol=1e-12)

@@ -2,7 +2,10 @@
 
 Run:  PYTHONPATH=src python tools/calibrate.py
 """
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import dse, nvm as nvm_mod
 from repro.core.energy import EnergyReport

@@ -3,12 +3,26 @@
 Tunes ONLY device-table constants (leakage, cell-energy fraction, VGSOT
 asymmetry) — never the dataflow mechanics. Prints the best configs; the
 winner gets frozen into devices.py.
+
+Runs on the experiment API with a single shared ``Evaluator``: workload
+extraction, suite buffer sizing, arch construction and dataflow mapping are
+memoized ONCE across the whole grid (they are untouched by device-constant
+mutation), so each grid cell pays only the analytic pricing — the seed
+implementation re-extracted and re-mapped the same 4 (workload, arch) pairs
+for every cell. ``benchmarks/bench_gridsearch.py`` records the speedup.
+
+    PYTHONPATH=src python tools/gridsearch.py [--limit N] [--top K]
 """
+import argparse
 import itertools
-import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import devices as dev
-from repro.core import dse, nvm as nvm_mod
+from repro.core import nvm as nvm_mod
+from repro.core.experiment import IPS_MIN, Evaluator, table3_space
 
 T3 = {  # (workload, arch) -> (p0_sav, p1_sav)
     ("detnet", "simba"): (0.27, 0.31),
@@ -17,23 +31,7 @@ T3 = {  # (workload, arch) -> (p0_sav, p1_sav)
     ("edsnet", "eyeriss"): (-0.15, -0.26),
 }
 
-
-def score():
-    err = 0.0
-    out = {}
-    for (w, a), (t0, t1) in T3.items():
-        ips = dse.IPS_MIN[w]
-        sram = dse.evaluate(w, a, 7, "sram")
-        p0 = dse.evaluate(w, a, 7, "p0")
-        p1 = dse.evaluate(w, a, 7, "p1")
-        s0 = nvm_mod.savings_at_ips(p0, sram, ips)
-        s1 = nvm_mod.savings_at_ips(p1, sram, ips)
-        out[(w, a)] = (s0, s1)
-        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
-    return err, out
-
-
-grid = dict(
+GRID = dict(
     leak=[0.008, 0.016, 0.030, 0.050],
     cf_min=[0.10, 0.20, 0.30],
     cf_slope=[0.20, 0.30, 0.40],
@@ -41,23 +39,75 @@ grid = dict(
     vg_write=[0.55, 0.80],
 )
 
-results = []
-for leak, cfm, cfs, vr, vw in itertools.product(*grid.values()):
+SPACE = table3_space(node=7)
+
+
+def score(ev: Evaluator):
+    """Squared error of the Table-3 savings grid vs the paper targets."""
+    err = 0.0
+    out = {}
+    results = ev.evaluate(SPACE)
+    for (w, a), group in results.groupby("workload", "arch").items():
+        reps = {p.variant: r for p, r in group}
+        ips = IPS_MIN[w]
+        s0 = nvm_mod.savings_at_ips(reps["p0"], reps["sram"], ips)
+        s1 = nvm_mod.savings_at_ips(reps["p1"], reps["sram"], ips)
+        out[(w, a)] = (s0, s1)
+        t0, t1 = T3[(w, a)]
+        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
+    return err, out
+
+
+def apply_knobs(leak, cfm, cfs, vr, vw):
     dev.SRAM_LEAK_UW_PER_KB_45 = leak
     dev.CELL_FRAC_MIN = cfm
     dev.CELL_FRAC_SLOPE = cfs
-    dev.DEVICES["vgsot"] = dev.MemDevice("vgsot", vr, vw, 0.0, 1 / 2.3, 1, 2, True)
-    try:
-        err, out = score()
-    except Exception as e:
-        continue
-    results.append((err, (leak, cfm, cfs, vr, vw), out))
+    dev.DEVICES["vgsot"] = dev.MemDevice("vgsot", vr, vw, 0.0, 1 / 2.3,
+                                         1, 2, True)
 
-results.sort(key=lambda r: r[0])
-for err, knobs, out in results[:8]:
-    print(f"err={err:.4f} leak={knobs[0]} cf_min={knobs[1]} cf_slope={knobs[2]} "
-          f"vg_r={knobs[3]} vg_w={knobs[4]}")
-    for k, v in out.items():
-        t = T3[k]
-        print(f"   {k[0]:8s}/{k[1]:8s}: p0={v[0]:+.1%} (t {t[0]:+.0%})  "
-              f"p1={v[1]:+.1%} (t {t[1]:+.0%})")
+
+def run(limit=None, top=8, quiet=False):
+    # Structural caches survive device-table mutation (they are geometry
+    # only); report caching must stay OFF under mutation.
+    ev = Evaluator(cache_reports=False)
+    saved = (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
+             dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"])
+    results = []
+    combos = itertools.product(*GRID.values())
+    if limit is not None:
+        combos = itertools.islice(combos, limit)
+    try:
+        for knobs in combos:
+            apply_knobs(*knobs)
+            try:
+                err, out = score(ev)
+            except Exception:
+                continue
+            results.append((err, knobs, out))
+    finally:
+        (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
+         dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"]) = saved
+
+    results.sort(key=lambda r: r[0])
+    if not quiet:
+        for err, knobs, out in results[:top]:
+            print(f"err={err:.4f} leak={knobs[0]} cf_min={knobs[1]} "
+                  f"cf_slope={knobs[2]} vg_r={knobs[3]} vg_w={knobs[4]}")
+            for k, v in out.items():
+                t = T3[k]
+                print(f"   {k[0]:8s}/{k[1]:8s}: p0={v[0]:+.1%} (t {t[0]:+.0%})  "
+                      f"p1={v[1]:+.1%} (t {t[1]:+.0%})")
+    return results
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--limit", type=int, default=None,
+                   help="evaluate only the first N grid cells")
+    p.add_argument("--top", type=int, default=8)
+    a = p.parse_args()
+    run(limit=a.limit, top=a.top)
+
+
+if __name__ == "__main__":
+    main()

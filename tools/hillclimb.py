@@ -1,30 +1,33 @@
-"""Hillclimb driver: compile ONE dry-run cell with config/rule overrides and
-print roofline terms + an HLO byte/op profile (the CPU-only 'profiler').
+"""Hillclimb driver with two modes.
+
+Roofline mode (default): compile ONE dry-run cell with config/rule overrides
+and print roofline terms + an HLO byte/op profile (the CPU-only 'profiler').
 
   PYTHONPATH=src python tools/hillclimb.py --arch gemma2-9b --shape decode_32k \
       [--set swa_ring_buffer=True] [--rule expert_cap=pod,data] [--profile]
-"""
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512").strip()
-os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
+DSE mode (--dse): greedy local search over the paper's design space
+{arch x node x variant x NVM device x PE config} for one workload, driven by
+the experiment API — every candidate neighborhood is a ``DesignSpace`` and
+all structural work is memoized by one ``Evaluator``, so each step prices a
+handful of cached mappings instead of re-running the pipeline.
+
+  PYTHONPATH=src python tools/hillclimb.py --dse --workload detnet \
+      [--objective edp|energy|pmem] [--ips 10]
+"""
 import argparse
 import collections
 import dataclasses
+import os
 import re
 import sys
 import time
 
-import jax
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.configs import SHAPES, get_config
-from repro.core import roofline as rl
-from repro.launch import dryrun, mesh as mesh_mod
-from repro.models import lm as lm_mod
-from repro.sharding import fix_divisibility, spec_tree, use_mesh
 
 
 def parse_override(s):
@@ -38,6 +41,8 @@ def parse_override(s):
 
 def profile_hlo(hlo: str, top: int = 18):
     """Aggregate result-shape bytes by opcode + biggest single ops."""
+    from repro.core import roofline as rl
+
     by_op = collections.Counter()
     biggest = []
     for line in hlo.splitlines():
@@ -55,17 +60,75 @@ def profile_hlo(hlo: str, top: int = 18):
         print(f"   {b/1e9:8.2f} GB  {op:<20}{shape}")
 
 
-def main():
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
-    p.add_argument("--shape", required=True)
-    p.add_argument("--multi-pod", action="store_true")
-    p.add_argument("--set", action="append", default=[],
-                   help="cfg field override, e.g. swa_ring_buffer=True")
-    p.add_argument("--rule", action="append", default=[],
-                   help="sharding rule override, e.g. expert_cap=pod,data")
-    p.add_argument("--profile", action="store_true")
-    a = p.parse_args()
+# ---------------------------------------------------------------------------
+# DSE mode: greedy local search over the experiment design space
+# ---------------------------------------------------------------------------
+
+DSE_AXES = dict(
+    arch=("cpu", "eyeriss", "simba"),
+    node=(45, 40, 28, 22, 7),
+    variant=("sram", "p0", "p1"),
+    nvm=(None, "stt", "sot", "vgsot"),
+    pe_config=("v1", "v2"),
+)
+
+
+def dse_main(a):
+    from repro.core.experiment import Evaluator, metric_fn, pmem_at
+    from repro.core.space import DesignPoint, DesignSpace
+
+    if a.objective == "edp":
+        metric = "edp"
+        fmt = lambda v: f"edp={v:.3e} J*s"
+    elif a.objective == "energy":
+        metric = "total_pj"
+        fmt = lambda v: f"E={v/1e6:.2f} uJ"
+    else:
+        metric = pmem_at(a.ips)
+        fmt = lambda v: f"P_mem@{a.ips}ips={v*1e6:.1f} uW"
+
+    ev = Evaluator()
+    f = metric_fn(metric)
+    point = DesignPoint(workload=a.workload, arch="cpu", node=45,
+                        variant="sram")
+    rs = ev.evaluate([point])
+    best = rs.best(metric)
+    t0 = time.monotonic()
+    print(f"=== DSE hillclimb: {a.workload}, objective {a.objective} ===")
+    step = 0
+    while True:
+        cur_point, _ = best
+        neighbors = [cur_point.with_(**{axis: v})
+                     for axis, values in DSE_AXES.items()
+                     for v in values if v != getattr(cur_point, axis)]
+        hood = DesignSpace.from_points([cur_point] + neighbors,
+                                       name=f"hood{step}")
+        cand = ev.evaluate(hood).best(metric)
+        if f(*cand) >= f(*best):
+            break
+        best = cand
+        step += 1
+        p, r = best
+        print(f"  step {step}: {p.arch}/{p.node}nm/{p.variant}"
+              f"/{p.nvm or 'auto'}/{p.pe_config}  {fmt(f(p, r))}")
+    p, r = best
+    hits, misses = ev.cache_info()["map"]
+    print(f"\nlocal optimum after {step} steps "
+          f"({time.monotonic()-t0:.1f}s, map cache {hits}h/{misses}m):")
+    print(f"  {p.arch} @ {p.node}nm, {p.variant}/{p.nvm or 'auto'}, "
+          f"pe={p.pe_config}: {fmt(f(p, r))}  "
+          f"lat={r.latency_s*1e3:.2f}ms  E={r.total_pj/1e6:.2f}uJ")
+
+
+# ---------------------------------------------------------------------------
+# roofline mode (dry-run compile probe)
+# ---------------------------------------------------------------------------
+
+def roofline_main(a):
+    from repro.configs import SHAPES, get_config
+    from repro.core import roofline as rl
+    from repro.launch import dryrun, mesh as mesh_mod
+    from repro.models import lm as lm_mod
 
     cfg = get_config(a.arch)
     if a.set:
@@ -103,6 +166,33 @@ def main():
         f"{k}={v/1e9:.2f}GB" for k, v in c2[3].items() if v))
     if a.profile:
         profile_hlo(c2c.as_text())
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dse", action="store_true",
+                   help="hillclimb the edge-DSE design space instead")
+    p.add_argument("--workload", default="detnet",
+                   help="[dse] workload / config name")
+    p.add_argument("--objective", default="edp",
+                   choices=("edp", "energy", "pmem"))
+    p.add_argument("--ips", type=float, default=10.0,
+                   help="[dse] inference rate for the pmem objective")
+    p.add_argument("--arch", help="[roofline] LM config name")
+    p.add_argument("--shape", help="[roofline] decode/prefill shape")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--set", action="append", default=[],
+                   help="cfg field override, e.g. swa_ring_buffer=True")
+    p.add_argument("--rule", action="append", default=[],
+                   help="sharding rule override, e.g. expert_cap=pod,data")
+    p.add_argument("--profile", action="store_true")
+    a = p.parse_args()
+    if a.dse:
+        dse_main(a)
+    else:
+        if not (a.arch and a.shape):
+            p.error("roofline mode needs --arch and --shape (or use --dse)")
+        roofline_main(a)
 
 
 if __name__ == "__main__":
