@@ -1,13 +1,29 @@
-"""Before/after timing for the gridsearch inner loop (Evaluator caching win).
+"""Gridsearch inner-loop timing: seed pipeline vs PR-1 Evaluator vs the
+columnar pricing core.
 
 The device-constant grid search scores every grid cell with the paper's
-Table-3 sweep: 12 evaluate() calls over the same 4 (workload, arch) pairs.
-The seed implementation re-ran workload extraction, suite buffer sizing,
-arch construction and dataflow mapping for every call; the experiment-API
-port memoizes all of that in one shared ``Evaluator`` and re-runs only the
-analytic pricing (the only stage device constants affect).
+Table-3 sweep (12 points over 4 (workload, arch) pairs). Three
+implementations of the same score:
+
+  * seed      — uncached nested-loop pipeline: re-extracts, re-sizes,
+                re-maps and re-prices every point per cell.
+  * reports   — PR-1 Evaluator: structural caches + numpy pricing, but
+                still materializes per-point ``EnergyReport``/``LevelEnergy``
+                dataclasses and calls scalar ``savings_at_ips`` per pair
+                (``tools.gridsearch.score_reports``).
+  * columnar  — this PR: one cached ``PricingPlan`` for the space, one
+                vectorized ``EnergyTable`` pricing + one batched savings
+                call per cell; no per-point Python objects
+                (``tools.gridsearch.score``).
 
     PYTHONPATH=src python benchmarks/bench_gridsearch.py [--cells 12]
+        [--check benchmarks/baseline_gridsearch.json]
+        [--write-baseline benchmarks/baseline_gridsearch.json]
+
+``--check`` is the CI smoke gate: it fails (exit 1) when the columnar
+speedup over the reports path regresses by more than 2x vs the committed
+baseline ratio (ratios are machine-independent, unlike absolute ms/cell,
+which is recorded for reference only).
 
 Measured numbers are recorded in benchmarks/GRIDSEARCH_TIMING.md.
 """
@@ -15,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import itertools
+import json
 import math
 import os
 import sys
@@ -24,10 +41,134 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+import numpy as np
+
 import legacy_reference as legacy
+from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
+from repro.core.energy import EnergyReport, LevelEnergy
 from repro.core.experiment import IPS_MIN, Evaluator
 from tools import gridsearch
+
+
+# ---------------------------------------------------------------------------
+# frozen PR-1 reference: the Evaluator's batched pricer as it existed before
+# the columnar core (verbatim copy of the removed ``_price_batch``). Its
+# value is being frozen — do not modernize.
+# ---------------------------------------------------------------------------
+
+
+def _pr1_price_batch(accesses, base, points):
+    from collections import OrderedDict as _OD  # noqa: F401 (parity w/ PR-1)
+    from repro.core import dataflow as dfl
+    from repro.core.dataflow import total_traffic
+
+    traffic = total_traffic(accesses)
+    levels = [l for l in base.levels if l.name in traffic]
+    macs = sum(a.macs for a in accesses)
+    dmacs = sum(a.delivery_macs for a in accesses)
+    compute_cycles = sum(a.compute_cycles for a in accesses)
+    is_cpu = base.dataflow == "sequential"
+
+    P, L = len(points), len(levels)
+    read_bits = np.array([traffic[l.name].read_bits for l in levels])
+    write_bits = np.array([traffic[l.name].write_bits for l in levels])
+    macro_kb = np.array([l.macro_kb for l in levels])
+    cap_kb = np.array([l.capacity_kb for l in levels])
+    bus = np.array([float(l.bus_bits) for l in levels])
+    port = np.array([1.0 if l.cls == "weight" else dev.ACT_PORT_LEAK_MULT
+                     for l in levels])
+    cf = np.array([dev.cell_energy_fraction(k) for k in macro_kb])
+    e45 = (dev.SRAM_E_BASE_PJ_BIT
+           + dev.SRAM_E_SQRT_PJ_BIT * np.sqrt(np.maximum(macro_kb, 1.0)))
+
+    scale = np.array([dev.NODE_ENERGY_SCALE[p.node] for p in points])
+    clock = np.array([dev.clock_ghz(p.node, base.clock_class) * 1e9
+                      for p in points])
+    nvms = [Evaluator._resolve_nvm(p) for p in points]
+    techs = []
+    for p, nvm in zip(points, nvms):
+        if p.variant == "sram":
+            techs.append([l.tech for l in levels])
+        elif p.variant == "p0":
+            techs.append([nvm if l.cls == "weight" else l.tech
+                          for l in levels])
+        elif p.variant == "p1":
+            techs.append([nvm] * L)
+        else:
+            raise ValueError(p.variant)
+    dv = [[dev.DEVICES[t] for t in row] for row in techs]
+    rm = np.array([[d.read_mult for d in row] for row in dv])
+    wm = np.array([[d.write_mult for d in row] for row in dv])
+    lm = np.array([[d.leak_mult for d in row] for row in dv])
+    rc = np.array([[float(d.read_cycles) for d in row] for row in dv])
+    wc = np.array([[float(d.write_cycles) for d in row] for row in dv])
+
+    base_e = e45[None, :] * scale[:, None]
+    er = base_e * ((1.0 - cf) + cf * rm)
+    ew = base_e * ((1.0 - cf) + cf * wm)
+    read_pj = read_bits[None, :] * er
+    write_pj = write_bits[None, :] * ew
+    leak_base = (dev.SRAM_LEAK_UW_PER_KB_45 * cap_kb[None, :]
+                 * scale[:, None] * port[None, :] * 1e-6)
+    standby = leak_base * lm
+    read_power = er * 1e-12 * bus[None, :] * clock[:, None]
+    cycles = (read_bits[None, :] / bus[None, :] * rc
+              + write_bits[None, :] / bus[None, :] * wc)
+
+    mac_pj = (dev.MAC_INT8_PJ_45
+              + (dev.CPU_OP_OVERHEAD_PJ_45 if is_cpu else 0.0)) * scale
+    dpj45 = (dfl.CPU_DELIVERY_PJ_PER_MAC_45 if is_cpu
+             else dfl.DELIVERY_PJ_PER_MAC_45)
+
+    reports = []
+    for i, p in enumerate(points):
+        lev = {}
+        for j, l in enumerate(levels):
+            lev[l.name] = LevelEnergy(
+                float(read_pj[i, j]), float(write_pj[i, j]),
+                float(standby[i, j]), techs[i][j], l.cls,
+                float(read_power[i, j]), float(leak_base[i, j]))
+        if L and cycles[i].max() > compute_cycles:
+            jmax = int(cycles[i].argmax())
+            bottleneck, cyc = levels[jmax].name, float(cycles[i, jmax])
+        else:
+            bottleneck, cyc = "compute", compute_cycles
+        reports.append(EnergyReport(
+            base.name, p.variant, nvms[i], p.node, p.workload_name, macs,
+            float(macs * mac_pj[i]), float(dmacs * dpj45 * scale[i]), lev,
+            float(cyc / clock[i]), compute_cycles, bottleneck))
+    return reports
+
+
+def pr1_score(ev: Evaluator):
+    """The PR-1 gridsearch score: per-group batched pricing with per-point
+    report materialization + scalar savings (frozen reference)."""
+    from collections import OrderedDict
+
+    pts = list(gridsearch.SPACE)
+    groups = OrderedDict()
+    for p in pts:
+        base = ev.base_arch(p)
+        groups.setdefault((p.workload_key(), base), (base, []))[1].append(p)
+    out_reports = {}
+    for (wkey, _), (base, members) in groups.items():
+        accesses = ev.accesses(members[0], base)
+        for p, rep in zip(members, _pr1_price_batch(accesses, base, members)):
+            out_reports[p] = rep
+    err = 0.0
+    out = {}
+    by_pair = {}
+    for p, r in out_reports.items():
+        by_pair.setdefault((p.workload_name, p.arch), {})[p.variant] = r
+    for (w, a), reps in by_pair.items():
+        ips = IPS_MIN[w]
+        s0 = nvm_mod.savings_at_ips(reps["p0"], reps["sram"], ips)
+        s1 = nvm_mod.savings_at_ips(reps["p1"], reps["sram"], ips)
+        out[(w, a)] = (s0, s1)
+        t0, t1 = gridsearch.T3[(w, a)]
+        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
+    return err, out
 
 
 def seed_score():
@@ -59,29 +200,88 @@ def run_cells(n_cells, score_fn):
     return time.monotonic() - t0, errs
 
 
+def measure(cells, repeats=3):
+    ev_col = Evaluator(cache_reports=False)
+    ev_row = Evaluator(cache_reports=False)
+    ev_pr1 = Evaluator(cache_reports=False)
+    # warm the structural/plan caches outside the timed region (the full
+    # 216-cell search amortizes this in the first cell)
+    gridsearch.score(ev_col)
+    gridsearch.score_reports(ev_row)
+    pr1_score(ev_pr1)
+
+    def best_of(score_fn):
+        """Min wall time over ``repeats`` passes (noise suppression)."""
+        times, errs = [], None
+        for _ in range(repeats):
+            t, errs = run_cells(cells, score_fn)
+            times.append(t)
+        return min(times), errs
+
+    t_col, errs_col = best_of(lambda: gridsearch.score(ev_col))
+    t_row, errs_row = best_of(lambda: gridsearch.score_reports(ev_row))
+    t_pr1, errs_pr1 = best_of(lambda: pr1_score(ev_pr1))
+    t_seed, errs_seed = best_of(seed_score)
+
+    for ec, ev_, e1, es in zip(errs_col, errs_row, errs_pr1, errs_seed):
+        assert math.isclose(ec, es, rel_tol=1e-9), (ec, es)
+        assert math.isclose(ev_, es, rel_tol=1e-9), (ev_, es)
+        assert math.isclose(e1, es, rel_tol=1e-9), (e1, es)
+
+    return dict(
+        cells=cells,
+        seed_ms_per_cell=t_seed / cells * 1e3,
+        pr1_ms_per_cell=t_pr1 / cells * 1e3,
+        rowview_ms_per_cell=t_row / cells * 1e3,
+        columnar_ms_per_cell=t_col / cells * 1e3,
+        speedup_pr1_vs_seed=t_seed / t_pr1,
+        speedup_columnar_vs_seed=t_seed / t_col,
+        speedup_columnar_vs_pr1=t_pr1 / t_col,
+        speedup_columnar_vs_rowview=t_row / t_col,
+    )
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--cells", type=int, default=12,
                    help="grid cells per implementation")
+    p.add_argument("--repeats", type=int, default=3,
+                   help="timing passes per implementation (min is reported)")
+    p.add_argument("--check", metavar="BASELINE_JSON",
+                   help="fail on >2x regression of the columnar speedup "
+                        "ratio vs the committed baseline")
+    p.add_argument("--write-baseline", metavar="BASELINE_JSON",
+                   help="record this run as the committed baseline")
     a = p.parse_args()
 
-    ev = Evaluator(cache_reports=False)
-    # warm the structural caches outside the timed region for the cached
-    # variant (the full 216-cell search amortizes this in the first cell)
-    gridsearch.score(ev)
+    m = measure(a.cells, repeats=a.repeats)
+    print(f"cells={m['cells']}  (scores identical to 1e-9)")
+    print(f"seed (uncached pipeline):   {m['seed_ms_per_cell']:8.2f} ms/cell"
+          f"    1.0x")
+    print(f"PR-1 Evaluator (frozen):    {m['pr1_ms_per_cell']:8.2f} ms/cell"
+          f"  {m['speedup_pr1_vs_seed']:6.1f}x")
+    print(f"evaluate() row views:       {m['rowview_ms_per_cell']:8.2f}"
+          f" ms/cell")
+    print(f"columnar EnergyTable:       {m['columnar_ms_per_cell']:8.2f}"
+          f" ms/cell  {m['speedup_columnar_vs_seed']:6.1f}x")
+    print(f"columnar vs PR-1 Evaluator: {m['speedup_columnar_vs_pr1']:.1f}x")
 
-    t_new, errs_new = run_cells(a.cells, lambda: gridsearch.score(ev))
-    t_seed, errs_seed = run_cells(a.cells, seed_score)
-
-    for en, es in zip(errs_new, errs_seed):
-        assert math.isclose(en, es, rel_tol=1e-9), (en, es)
-
-    print(f"cells={a.cells}")
-    print(f"seed (uncached pipeline): {t_seed:8.2f}s "
-          f"({t_seed/a.cells*1e3:7.1f} ms/cell)")
-    print(f"experiment Evaluator:     {t_new:8.2f}s "
-          f"({t_new/a.cells*1e3:7.1f} ms/cell)")
-    print(f"speedup: {t_seed/t_new:.1f}x  (scores identical to 1e-9)")
+    if a.write_baseline:
+        with open(a.write_baseline, "w") as f:
+            json.dump(m, f, indent=1)
+        print(f"baseline written to {a.write_baseline}")
+    if a.check:
+        with open(a.check) as f:
+            base = json.load(f)
+        floor = base["speedup_columnar_vs_pr1"] / 2.0
+        got = m["speedup_columnar_vs_pr1"]
+        print(f"check: columnar-vs-PR1 speedup {got:.1f}x "
+              f"(baseline {base['speedup_columnar_vs_pr1']:.1f}x, "
+              f"floor {floor:.1f}x)")
+        if got < floor:
+            print("FAIL: >2x regression of the columnar speedup ratio")
+            sys.exit(1)
+        print("OK")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@
 DSE figures run on the experiment API: each is a declarative ``DesignSpace``
 (``repro.core.experiment.SWEEPS``) evaluated by one shared ``Evaluator``, so
 workload extraction / buffer sizing / mapping are done once across the whole
-benchmark run instead of once per figure."""
+benchmark run instead of once per figure. Pricing is columnar
+(``repro.core.columns``): each space is one vectorized ``EnergyTable`` pass,
+and Fig 5 is a single (points x IPS-grid) power surface + batched-bisection
+cross-overs instead of per-(point, ips) scalar calls."""
 from __future__ import annotations
 
 from typing import Dict, List, Tuple

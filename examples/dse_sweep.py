@@ -4,7 +4,11 @@ readable tables.
 
 Each figure/table is a declarative ``DesignSpace`` (see
 ``repro.core.experiment.SWEEPS``); one shared ``Evaluator`` memoizes
-workload extraction, buffer sizing and dataflow mapping across all of them.
+workload extraction, buffer sizing and dataflow mapping across all of them,
+and pricing is COLUMNAR: the Fig-5 section below evaluates the whole space
+as one ``EnergyTable``, emits every memory-power-vs-IPS curve as a single
+(points x IPS-grid) surface (``memory_power_curves``), and finds all
+NVM-vs-SRAM cross-overs with one batched bisection.
 
     PYTHONPATH=src python examples/dse_sweep.py
 """
@@ -13,6 +17,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+
+from repro.core import nvm as nvm_mod
 from repro.core.experiment import SWEEPS, Evaluator, pmem_at
 
 
@@ -51,16 +58,25 @@ show("Table 3: P_mem savings @ IPS_min", SWEEPS["table3"].rows(ev),
      ["workload", "arch", "ips", "sram_latency_ms", "p0_latency_ms",
       "p1_latency_ms", "p0_savings", "p1_savings"])
 
-xo = [r for r in SWEEPS["fig5"].rows(ev, n_points=2) if r["crossover_ips"]]
-seen = set()
-print("\n=== Fig 5: cross-over IPS (NVM wins below) ===")
-for r in xo:
-    key = (r["workload"], r["arch"], r["variant"], r["device"])
-    if key in seen:
-        continue
-    seen.add(key)
-    print(f"  {r['workload']:8s} {r['arch']:8s} {r['variant']} "
-          f"{r['device']:6s}: {r['crossover_ips']:.2f} IPS")
+# --- Fig 5, the columnar way: whole curves + cross-overs in 3 calls --------
+space5 = SWEEPS["fig5"].space()
+pts = list(space5)
+table = ev.evaluate_table(space5)           # EnergyTable: one pass, all points
+ips_grid = np.logspace(-2, 2, 25)           # the figure's IPS axis
+power = table.memory_power_curves(ips_grid)  # (points x grid) power surface
+mram, sram_rows = nvm_mod.sram_pairs(pts)
+xo = nvm_mod.crossover_ips_batch(table, mram, sram_rows)
+g1 = int(np.argmin(np.abs(ips_grid - 1.0)))  # the 1-IPS column of the grid
+
+print("\n=== Fig 5 (columnar): cross-over IPS (NVM wins below) ===")
+for k, i in enumerate(mram):
+    p = pts[i]
+    label = f"{p.workload_name:8s} {p.arch:8s} {p.variant} {p.nvm:6s}"
+    pmem_1ips = power.p_mem_w[i, g1] * 1e6
+    if np.isnan(xo[k]):
+        print(f"  {label}: never saves      (P_mem@1ips {pmem_1ips:8.1f} uW)")
+    else:
+        print(f"  {label}: {xo[k]:8.2f} IPS  (P_mem@1ips {pmem_1ips:8.1f} uW)")
 
 print("\n=== Beyond-paper: edge-LM KV-cache DSE ===")
 for r in SWEEPS["lm_kv"].rows(ev, arch_names=("simba",),

@@ -48,3 +48,14 @@ def area(arch: ArchSpec, node: int, variant: str = "sram") -> AreaReport:
 
 def savings(nvm: AreaReport, sram: AreaReport) -> float:
     return 1.0 - nvm.total_mm2 / sram.total_mm2
+
+
+def area_space(traffic_groups, gidx, points, nvms):
+    """Vectorized ``area`` over a whole design space in one numpy pass.
+
+    Same inputs as ``energy.price_space``; returns a ``columns.AreaTable``
+    whose ``row(i)`` is the ``AreaReport`` view. The scalar ``area`` above
+    stays the single-point reference implementation."""
+    from repro.core import columns
+    return columns.area(columns.build_plan(traffic_groups, gidx, points,
+                                           nvms))

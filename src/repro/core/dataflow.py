@@ -174,6 +174,13 @@ def map_workload(specs: Sequence[ConvLayerSpec], arch: ArchSpec
     return [map_layer(s, arch) for s in specs]
 
 
+def map_workload_columns(specs: Sequence[ConvLayerSpec], arch: ArchSpec):
+    """Vectorized mapper: all layers in array ops -> ``TrafficTable``
+    (the columnar path; ``map_workload`` stays the scalar oracle)."""
+    from repro.core import columns
+    return columns.TrafficTable.map_specs(specs, arch)
+
+
 # ---------------------------------------------------------------------------
 # workload-level aggregates
 # ---------------------------------------------------------------------------

@@ -21,6 +21,8 @@ import dataclasses
 import math
 from typing import Dict
 
+import numpy as np
+
 # ---------------------------------------------------------------------------
 # technology nodes
 # ---------------------------------------------------------------------------
@@ -111,14 +113,21 @@ CELL_FRAC_MIN, CELL_FRAC_MAX = 0.60, 0.95
 CELL_FRAC_SLOPE = 0.20          # per decade of kB above 0.25kB
 
 
-def cell_energy_fraction(capacity_kb: float) -> float:
-    decades = math.log10(max(capacity_kb, 0.25) / 0.25)
-    return min(CELL_FRAC_MAX, CELL_FRAC_MIN + CELL_FRAC_SLOPE * decades)
+def cell_energy_fraction(capacity_kb):
+    """Elementwise (scalar or ndarray) — the columnar core calls this on
+    whole (point x level) macro-size arrays; one source of truth."""
+    decades = np.log10(np.maximum(capacity_kb, 0.25) / 0.25)
+    return np.minimum(CELL_FRAC_MAX, CELL_FRAC_MIN + CELL_FRAC_SLOPE * decades)
+
+
+def sram_e45_pj_per_bit(capacity_kb):
+    """SRAM access energy at the 45nm reference, elementwise."""
+    return (SRAM_E_BASE_PJ_BIT
+            + SRAM_E_SQRT_PJ_BIT * np.sqrt(np.maximum(capacity_kb, 1.0)))
 
 
 def sram_read_pj_per_bit(capacity_kb: float, node: int) -> float:
-    e45 = SRAM_E_BASE_PJ_BIT + SRAM_E_SQRT_PJ_BIT * math.sqrt(max(capacity_kb, 1.0))
-    return e45 * NODE_ENERGY_SCALE[node]
+    return sram_e45_pj_per_bit(capacity_kb) * NODE_ENERGY_SCALE[node]
 
 
 def mem_energy_pj_per_bit(dev: str, capacity_kb: float, node: int,

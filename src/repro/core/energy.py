@@ -144,3 +144,17 @@ def price(accesses: Sequence[LayerAccess], arch: ArchSpec, node: int,
     return EnergyReport(arch.name, variant, nvm, node, workload, macs,
                         compute_pj, delivery_pj, levels, latency_s,
                         compute_cycles, bottleneck)
+
+
+def price_space(traffic_groups, gidx, points, nvms):
+    """Vectorized ``price`` over a whole design space in one numpy pass.
+
+    ``traffic_groups`` are ``columns.TrafficTable``s (one per mapped
+    (workload, sized-arch) pair), ``gidx`` maps each point to its group,
+    ``nvms`` is the resolved device per point. Returns an
+    ``columns.EnergyTable`` whose ``row(i)`` is the ``EnergyReport`` view.
+    The scalar ``price`` above stays the single-point reference the parity
+    suite checks the columnar path against."""
+    from repro.core import columns
+    return columns.price(columns.build_plan(traffic_groups, gidx, points,
+                                            nvms))

@@ -10,8 +10,11 @@ Everything left of ``price`` is *pricing-independent*: access counts are set
 by buffer capacities, which P0/P1/node do not change (see ``core.dataflow``).
 ``Evaluator`` memoizes each layer across a space, so a 9-variant x 2-node
 sweep extracts each workload once and maps each (workload, sized-arch) pair
-once; only the cheap analytic pricing runs per point. The batched path
-prices all points that share a mapping in one numpy shot.
+once; only the cheap analytic pricing runs per point. Pricing itself is
+columnar (``core.columns``): the whole space is flattened to a cached
+``PricingPlan`` and priced in ONE vectorized pass (``evaluate_table``);
+``evaluate`` materializes ``EnergyReport`` rows as thin views over the
+resulting ``EnergyTable``.
 
 Pricing deliberately re-reads the device tables (``core.devices``) on every
 call: calibration tools mutate those constants mid-run, so only *structural*
@@ -35,13 +38,14 @@ import numpy as np
 
 from repro.configs.base import ConvLayerSpec, ModelConfig, XRConfig
 from repro.core import area as area_mod
+from repro.core import columns
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core import workload as wl
 from repro.core.archspec import ArchSpec, apply_variant, get_arch
-from repro.core.dataflow import (map_workload, required_act_kb,
-                                 required_weight_kb, total_traffic)
-from repro.core.energy import EnergyReport, LevelEnergy, price
+from repro.core.dataflow import (map_workload, map_workload_columns,
+                                 required_act_kb, required_weight_kb)
+from repro.core.energy import EnergyReport, price
 from repro.core.space import Bind, DesignPoint, DesignSpace, PAPER_SUITE
 
 # paper §5: application minimum inference rates
@@ -106,11 +110,17 @@ class Evaluator:
         self._suite: Dict[Tuple[str, ...], Tuple[float, float]] = {}
         self._archs: Dict[Tuple, ArchSpec] = {}
         self._maps: Dict[Tuple, list] = {}
+        self._traffic: Dict[Tuple, columns.TrafficTable] = {}
+        # LRU-bounded: plans are keyed by the full point tuple, so one-off
+        # spaces (hillclimb neighborhoods) would otherwise accumulate
+        # forever; repeated spaces (gridsearch cells) stay resident.
+        self._plans: "OrderedDict[Tuple, columns.PricingPlan]" = OrderedDict()
+        self._plans_max = 64
         self._reports: Dict[DesignPoint, EnergyReport] = {}
         self._areas: Dict[DesignPoint, area_mod.AreaReport] = {}
         self.stats: Dict[str, List[int]] = {
-            k: [0, 0] for k in ("specs", "suite", "arch", "map", "report",
-                                "area")}
+            k: [0, 0] for k in ("specs", "suite", "arch", "map", "traffic",
+                                "plan", "report", "area")}
 
     def _tick(self, cache: str, hit: bool) -> None:
         self.stats[cache][0 if hit else 1] += 1
@@ -184,6 +194,50 @@ class Evaluator:
             self._maps[key] = map_workload(specs, base)
         return self._maps[key]
 
+    def traffic(self, point: DesignPoint,
+                base: Optional[ArchSpec] = None) -> columns.TrafficTable:
+        """Columnar access counts for the point's mapping group — the
+        vectorized mapper's output, cached per (workload, sized arch).
+        ``accesses`` above is the scalar-oracle counterpart."""
+        base = base or self.base_arch(point)
+        key = (point.workload_key(), base)
+        hit = key in self._traffic
+        self._tick("traffic", hit)
+        if not hit:
+            specs = self.specs(point.workload, point.extract_kw)
+            self._traffic[key] = map_workload_columns(specs, base)
+        return self._traffic[key]
+
+    def plan(self, points: Sequence[DesignPoint],
+             for_area: bool = False) -> columns.PricingPlan:
+        """Geometry flattening of a whole space (cached): traffic groups +
+        per-point coordinates -> one ``PricingPlan``. Plans hold no device
+        constants, so they stay valid across device-table mutation — the
+        gridsearch hot loop re-prices a cached plan every cell."""
+        pts = tuple(points)
+        key = (pts, for_area)
+        hit = key in self._plans
+        self._tick("plan", hit)
+        if hit:
+            self._plans.move_to_end(key)
+        else:
+            groups: "OrderedDict[Tuple, int]" = OrderedDict()
+            tables: List[columns.TrafficTable] = []
+            gidx: List[int] = []
+            default = "vgsot" if for_area else "stt"
+            for p in pts:
+                base = self.base_arch(p)
+                gkey = (p.workload_key(), base)
+                if gkey not in groups:
+                    groups[gkey] = len(tables)
+                    tables.append(self.traffic(p, base))
+                gidx.append(groups[gkey])
+            nvms = [self._resolve_nvm(p, default=default) for p in pts]
+            self._plans[key] = columns.build_plan(tables, gidx, pts, nvms)
+            if len(self._plans) > self._plans_max:
+                self._plans.popitem(last=False)
+        return self._plans[key]
+
     # --- pricing -----------------------------------------------------------
     @staticmethod
     def _resolve_nvm(point: DesignPoint, default: str = "stt") -> str:
@@ -218,127 +272,75 @@ class Evaluator:
             self._areas[point] = rep
         return rep
 
+    def evaluate_table(self, points: Iterable[DesignPoint]
+                       ) -> columns.EnergyTable:
+        """Columnar evaluation: price the ENTIRE space in one vectorized
+        pass and return the ``EnergyTable`` (no per-point dataclasses are
+        materialized — ``table.row(i)`` builds the ``EnergyReport`` view on
+        demand). Bypasses the report cache; structural + plan caches carry
+        all the reuse."""
+        return columns.price(self.plan(points))
+
+    def power_curves(self, points: Iterable[DesignPoint],
+                     ips_grid) -> columns.PowerTable:
+        """Whole Fig-5 surface for a space: memory power of every point at
+        every IPS of ``ips_grid``, one vectorized shot."""
+        return self.evaluate_table(points).memory_power_curves(ips_grid)
+
+    def area_table(self, points: Iterable[DesignPoint]) -> columns.AreaTable:
+        """Columnar area evaluation of the whole space (one numpy pass)."""
+        return columns.area(self.plan(points, for_area=True))
+
     def evaluate(self, points: Iterable[DesignPoint],
                  batched: bool = True) -> "ResultSet":
-        """Evaluate a space; with ``batched`` the analytic cost model is
-        vectorized over all points sharing a mapping (numpy, one shot per
-        (workload, arch) group)."""
+        """Evaluate a space; with ``batched`` (default) the whole space is
+        priced by the columnar core in one vectorized pass and the reports
+        are thin row views over the ``EnergyTable``. ``batched=False`` runs
+        the scalar single-point oracle per point (the parity reference)."""
         pts = list(points)
         name = getattr(points, "name", "results")
         if not batched:
             return ResultSet([(p, self.report(p)) for p in pts], name=name)
         out: Dict[DesignPoint, EnergyReport] = {}
-        groups: "OrderedDict[Tuple, Tuple[ArchSpec, List[DesignPoint]]]" = \
-            OrderedDict()
+        to_price: List[DesignPoint] = []
         for p in pts:
             if self._cache_reports and p in self._reports:
                 self._tick("report", True)
                 out[p] = self._reports[p]
-                continue
-            self._tick("report", False)
-            base = self.base_arch(p)
-            key = (p.workload_key(), base)
-            groups.setdefault(key, (base, []))[1].append(p)
-        for (wkey, _), (base, members) in groups.items():
-            accesses = self.accesses(members[0], base)
-            reports = _price_batch(accesses, base, members)
-            for p, rep in zip(members, reports):
+            else:
+                self._tick("report", False)
+                to_price.append(p)
+        if to_price:
+            table = self.evaluate_table(to_price)
+            for i, p in enumerate(to_price):
+                rep = table.row(i)
                 out[p] = rep
                 if self._cache_reports:
                     self._reports[p] = rep
         return ResultSet([(p, out[p]) for p in pts], name=name)
 
     def areas(self, points: Iterable[DesignPoint]) -> "ResultSet":
+        """Area counterpart of ``evaluate``: one columnar pass, rows are
+        ``AreaReport`` views."""
+        pts = list(points)
         name = getattr(points, "name", "areas")
-        return ResultSet([(p, self.area(p)) for p in points], name=name)
-
-
-def _price_batch(accesses: list, base: ArchSpec,
-                 points: Sequence[DesignPoint]) -> List[EnergyReport]:
-    """Vectorized ``energy.price`` over points sharing one mapping.
-
-    Access counts are fixed by the mapping; node scale and per-level device
-    multipliers vary per point. All (P, L) arrays are priced in one numpy
-    shot, then unpacked into the same ``EnergyReport`` structure the scalar
-    path produces (identical formulas — the parity test holds them to 1e-9).
-    """
-    traffic = total_traffic(accesses)
-    levels = [l for l in base.levels if l.name in traffic]
-    macs = sum(a.macs for a in accesses)
-    dmacs = sum(a.delivery_macs for a in accesses)
-    compute_cycles = sum(a.compute_cycles for a in accesses)
-    is_cpu = base.dataflow == "sequential"
-    from repro.core import dataflow as dfl
-
-    P, L = len(points), len(levels)
-    read_bits = np.array([traffic[l.name].read_bits for l in levels])
-    write_bits = np.array([traffic[l.name].write_bits for l in levels])
-    macro_kb = np.array([l.macro_kb for l in levels])
-    cap_kb = np.array([l.capacity_kb for l in levels])
-    bus = np.array([float(l.bus_bits) for l in levels])
-    port = np.array([1.0 if l.cls == "weight" else dev.ACT_PORT_LEAK_MULT
-                     for l in levels])
-    cf = np.array([dev.cell_energy_fraction(k) for k in macro_kb])
-    e45 = (dev.SRAM_E_BASE_PJ_BIT
-           + dev.SRAM_E_SQRT_PJ_BIT * np.sqrt(np.maximum(macro_kb, 1.0)))
-
-    scale = np.array([dev.NODE_ENERGY_SCALE[p.node] for p in points])
-    clock = np.array([dev.clock_ghz(p.node, base.clock_class) * 1e9
-                      for p in points])
-    nvms = [Evaluator._resolve_nvm(p) for p in points]
-    techs: List[List[str]] = []
-    for p, nvm in zip(points, nvms):
-        if p.variant == "sram":
-            techs.append([l.tech for l in levels])
-        elif p.variant == "p0":
-            techs.append([nvm if l.cls == "weight" else l.tech
-                          for l in levels])
-        elif p.variant == "p1":
-            techs.append([nvm] * L)
-        else:
-            raise ValueError(p.variant)
-    dv = [[dev.DEVICES[t] for t in row] for row in techs]
-    rm = np.array([[d.read_mult for d in row] for row in dv])
-    wm = np.array([[d.write_mult for d in row] for row in dv])
-    lm = np.array([[d.leak_mult for d in row] for row in dv])
-    rc = np.array([[float(d.read_cycles) for d in row] for row in dv])
-    wc = np.array([[float(d.write_cycles) for d in row] for row in dv])
-
-    base_e = e45[None, :] * scale[:, None]            # sram pj/bit (P, L)
-    er = base_e * ((1.0 - cf) + cf * rm)
-    ew = base_e * ((1.0 - cf) + cf * wm)
-    read_pj = read_bits[None, :] * er
-    write_pj = write_bits[None, :] * ew
-    leak_base = (dev.SRAM_LEAK_UW_PER_KB_45 * cap_kb[None, :]
-                 * scale[:, None] * port[None, :] * 1e-6)
-    standby = leak_base * lm
-    read_power = er * 1e-12 * bus[None, :] * clock[:, None]
-    cycles = (read_bits[None, :] / bus[None, :] * rc
-              + write_bits[None, :] / bus[None, :] * wc)
-
-    mac_pj = (dev.MAC_INT8_PJ_45
-              + (dev.CPU_OP_OVERHEAD_PJ_45 if is_cpu else 0.0)) * scale
-    dpj45 = (dfl.CPU_DELIVERY_PJ_PER_MAC_45 if is_cpu
-             else dfl.DELIVERY_PJ_PER_MAC_45)
-
-    reports = []
-    for i, p in enumerate(points):
-        lev: Dict[str, LevelEnergy] = {}
-        for j, l in enumerate(levels):
-            lev[l.name] = LevelEnergy(
-                float(read_pj[i, j]), float(write_pj[i, j]),
-                float(standby[i, j]), techs[i][j], l.cls,
-                float(read_power[i, j]), float(leak_base[i, j]))
-        if L and cycles[i].max() > compute_cycles:
-            jmax = int(cycles[i].argmax())
-            bottleneck, cyc = levels[jmax].name, float(cycles[i, jmax])
-        else:
-            bottleneck, cyc = "compute", compute_cycles
-        reports.append(EnergyReport(
-            base.name, p.variant, nvms[i], p.node, p.workload_name, macs,
-            float(macs * mac_pj[i]), float(dmacs * dpj45 * scale[i]), lev,
-            float(cyc / clock[i]), compute_cycles, bottleneck))
-    return reports
+        out: Dict[DesignPoint, area_mod.AreaReport] = {}
+        to_price: List[DesignPoint] = []
+        for p in pts:
+            if self._cache_reports and p in self._areas:
+                self._tick("area", True)
+                out[p] = self._areas[p]
+            else:
+                self._tick("area", False)
+                to_price.append(p)
+        if to_price:
+            table = self.area_table(to_price)
+            for i, p in enumerate(to_price):
+                rep = table.row(i)
+                out[p] = rep
+                if self._cache_reports:
+                    self._areas[p] = rep
+        return ResultSet([(p, out[p]) for p in pts], name=name)
 
 
 # ---------------------------------------------------------------------------
@@ -549,25 +551,32 @@ def fig5_space(workloads=PAPER_SUITE, node: int = 7) -> DesignSpace:
 
 def fig5_rows(ev: Evaluator, workloads=PAPER_SUITE, node: int = 7,
               n_points: int = 25) -> List[Dict]:
-    rs = ev.evaluate(fig5_space(workloads, node))
-    sram = {(p.workload_name, p.arch): r for p, r in rs
-            if p.variant == "sram"}
+    """Whole-figure columnar path: ONE ``EnergyTable`` for the space, ONE
+    (points x IPS-grid) power surface, and every cross-over via batched
+    bisection — no per-(point, ips) scalar calls."""
+    if n_points < 2:
+        raise ValueError("fig5_rows needs n_points >= 2 for the IPS grid")
+    space = fig5_space(workloads, node)
+    pts = list(space)
+    table = ev.evaluate_table(space)
+    mram, pair_s = nvm_mod.sram_pairs(pts)
+    xo = nvm_mod.crossover_ips_batch(table, mram, pair_s)
+    ips_grid = 10 ** (-2 + 4 * np.arange(n_points) / (n_points - 1))
+    power = nvm_mod.memory_power_curves(table, ips_grid)
     rows = []
-    for p, r in rs:
-        if p.variant == "sram":
-            continue
-        s = sram[(p.workload_name, p.arch)]
-        xo = nvm_mod.crossover_ips(r, s)
-        for i in range(n_points):
-            ips = 10 ** (-2 + 4 * i / (n_points - 1))
-            if ips > r.max_ips:
+    for k, i in enumerate(mram):
+        p = pts[i]
+        xval = None if math.isnan(xo[k]) else float(xo[k])
+        for g in range(n_points):
+            ips = float(ips_grid[g])
+            if ips > table.max_ips[i]:
                 break
             rows.append(dict(
                 workload=p.workload_name, arch=p.arch, variant=p.variant,
                 device=p.nvm, ips=ips,
-                p_mem_w=nvm_mod.memory_power_w(r, ips),
-                p_sram_w=nvm_mod.memory_power_w(s, ips),
-                crossover_ips=xo))
+                p_mem_w=float(power.p_mem_w[i, g]),
+                p_sram_w=float(power.p_mem_w[pair_s[k], g]),
+                crossover_ips=xval))
     return rows
 
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core import devices as dev
 from repro.core.energy import EnergyReport
 
@@ -81,3 +83,58 @@ def crossover_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
         else:
             hi = mid
     return (lo * hi) ** 0.5
+
+
+# ---------------------------------------------------------------------------
+# columnar entry points (whole-space / whole-curve, see core.columns)
+# ---------------------------------------------------------------------------
+
+
+def sram_pairs(points):
+    """Pair every non-SRAM point with its (workload, arch) SRAM baseline.
+
+    Returns ``(mram_rows, sram_rows)`` index lists into ``points`` — the
+    row pairing every batched savings/cross-over call needs (Fig 5,
+    Table 3); keeping it here stops callers hand-rolling the key."""
+    pts = list(points)
+    sram = {(p.workload_name, p.arch): i for i, p in enumerate(pts)
+            if p.variant == "sram"}
+    mram = [i for i, p in enumerate(pts) if p.variant != "sram"]
+    return mram, [sram[(pts[i].workload_name, pts[i].arch)] for i in mram]
+
+
+def memory_power_curve(report: EnergyReport, ips_grid) -> np.ndarray:
+    """Whole Fig-5 curve for ONE report: ``memory_power_w`` over an IPS grid
+    in one vectorized shot (delegates to the columnar formula)."""
+    from repro.core.columns import _pmem
+    return _pmem(report.mem_pj * 1e-12, report.latency_s, report.standby_w,
+                 wake_energy_j(report), np.asarray(ips_grid, float))
+
+
+def memory_power_curves(table, ips_grid):
+    """Whole-space Fig-5 surface: (points x IPS-grid) ``PowerTable`` from a
+    ``columns.EnergyTable`` in one vectorized pass."""
+    return table.memory_power_curves(ips_grid)
+
+
+def savings_at_ips_batch(table, nvm_rows, sram_rows, ips) -> np.ndarray:
+    """Vectorized ``savings_at_ips`` for row pairs of an ``EnergyTable``;
+    ``ips`` is a scalar or per-pair array."""
+    from repro.core.columns import _pmem
+    nvm_rows = np.asarray(nvm_rows, int)
+    sram_rows = np.asarray(sram_rows, int)
+    ips = np.asarray(ips, float)
+    e, lat = table.mem_pj * 1e-12, table.latency_s
+    sb, wk = table.standby_w, table.wake_energy_j
+    p_n = _pmem(e[nvm_rows], lat[nvm_rows], sb[nvm_rows], wk[nvm_rows], ips)
+    p_s = _pmem(e[sram_rows], lat[sram_rows], sb[sram_rows], wk[sram_rows],
+                ips)
+    return 1.0 - p_n / p_s
+
+
+def crossover_ips_batch(table, nvm_rows, sram_rows,
+                        lo: float = 1e-4) -> np.ndarray:
+    """Batched-bisection ``crossover_ips`` over row pairs of an
+    ``EnergyTable``; NaN encodes the scalar path's ``None``."""
+    from repro.core import columns
+    return columns.crossover_ips(table, nvm_rows, sram_rows, lo=lo)

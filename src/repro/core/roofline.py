@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 # TPU v5e-class hardware constants (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
@@ -47,27 +47,45 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+# match:  [ROOT] <name> = <shape(s)> <opcode>(...)
+# Opcodes may carry numeric disambiguation suffixes in optimized dumps
+# (`all-to-all.1`, `all-reduce.23`), so the opcode token admits digits and a
+# trailing `.N`; the suffix is stripped before classification. The root
+# instruction is printed with a `ROOT ` prefix (often a final all-reduce).
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?[%\w.\-]+\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*(?:\.\d+)?)\(")
+
+
+def parse_op(line: str) -> Optional[Tuple[str, str]]:
+    """(result_shape, opcode) of one HLO instruction line, or None.
+
+    The opcode is normalized: `.N` id suffixes are stripped. Shared by
+    ``collective_bytes`` and the HLO profiler in tools/hillclimb.py."""
+    m = _OP_RE.match(line.strip())
+    if not m:
+        return None
+    return m.group(1), m.group(2).split(".", 1)[0]
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum result-shape bytes of every collective op in the HLO, by kind.
 
     Uses the op's RESULT shape (left of '='), a standard proxy for the bytes
-    the collective moves per participating device.
+    the collective moves per participating device. Async pairs are counted
+    once: ``*-start`` carries the shape, ``*-done`` is skipped.
     """
     out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
-        s = line.strip()
-        # match:  <name> = <shape(s)> <opcode>(...)
-        m = re.match(r"[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
-        if not m:
+        parsed = parse_op(line)
+        if parsed is None:
             continue
-        opcode = m.group(2)
-        if opcode.rstrip("-") in _COLLECTIVES or opcode in _COLLECTIVES:
-            kind = opcode if opcode in _COLLECTIVES else opcode.rstrip("-")
-            out[kind] += _shape_bytes(m.group(1))
-        elif opcode.endswith("-start"):
-            base = opcode[:-6]
-            if base in _COLLECTIVES:
-                out[base] += _shape_bytes(m.group(1))
+        shape, opcode = parsed
+        if opcode.endswith("-start"):
+            opcode = opcode[:-len("-start")]
+        elif opcode.endswith("-done"):
+            continue                           # completion of a counted start
+        if opcode in _COLLECTIVES:
+            out[opcode] += _shape_bytes(shape)
     return out
 
 

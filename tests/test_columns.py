@@ -1,0 +1,277 @@
+"""Columnar-core tests: property-based dataflow invariants (conservation,
+monotonicity, scalar-vs-columnar parity on random ``ConvLayerSpec``s) and
+``nvm.crossover_ips`` edge cases incl. the batched bisection."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ConvLayerSpec
+from repro.core import area as area_mod
+from repro.core import columns, energy, nvm as nvm_mod
+from repro.core import experiment as xp
+from repro.core.archspec import get_arch
+from repro.core.dataflow import map_workload, total_traffic
+from repro.core.energy import EnergyReport, LevelEnergy, price
+from repro.core.space import DesignPoint
+
+ARCH_NAMES = ("cpu", "eyeriss", "simba")
+
+
+def _arch(name):
+    if name == "cpu":
+        return get_arch("cpu")
+    return get_arch(name, pe_config="v2")
+
+
+def _spec(kind, cin, cout, hw, k, stride):
+    if kind == "dense":
+        return ConvLayerSpec("L", "dense", cin, cout, 1, 1, (1, 1))
+    if kind == "dwconv":
+        cin = cout                      # depthwise: per-channel filters
+    return ConvLayerSpec("L", kind, cin, cout, k, stride, (hw, hw))
+
+
+spec_strategy = dict(
+    kind=st.sampled_from(["conv", "dwconv", "dense"]),
+    cin=st.integers(1, 256),
+    cout=st.integers(1, 256),
+    hw=st.sampled_from([4, 8, 16, 32, 64]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+
+
+# ---------------------------------------------------------------------------
+# property: scalar-vs-columnar mapper parity on random layers
+# ---------------------------------------------------------------------------
+
+@given(**spec_strategy)
+@settings(max_examples=40, deadline=None)
+def test_vectorized_mapper_matches_scalar(kind, cin, cout, hw, k, stride):
+    spec = _spec(kind, cin, cout, hw, k, stride)
+    for arch_name in ARCH_NAMES:
+        arch = _arch(arch_name)
+        ref = total_traffic(map_workload([spec], arch))
+        tab = columns.TrafficTable.map_specs([spec], arch)
+        got = tab.aggregate()
+        assert set(got) == set(ref)
+        for lvl in ref:
+            assert math.isclose(got[lvl].read_bits, ref[lvl].read_bits,
+                                rel_tol=1e-12, abs_tol=1e-9), (arch_name, lvl)
+            assert math.isclose(got[lvl].write_bits, ref[lvl].write_bits,
+                                rel_tol=1e-12, abs_tol=1e-9), (arch_name, lvl)
+        acc = tab.row(0)
+        assert acc.macs == spec.macs
+        assert math.isclose(tab.total_compute_cycles,
+                            sum(a.compute_cycles
+                                for a in map_workload([spec], arch)),
+                            rel_tol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# property: traffic conservation across levels
+# ---------------------------------------------------------------------------
+
+@given(**spec_strategy)
+@settings(max_examples=40, deadline=None)
+def test_weight_traffic_conserved_between_levels(kind, cin, cout, hw, k,
+                                                 stride):
+    """Every weight bit written into a per-PE weight store was read out of
+    the backing global weight buffer (stream-through conservation), and no
+    level emits negative traffic."""
+    spec = _spec(kind, cin, cout, hw, k, stride)
+    for arch_name, pe_level in (("eyeriss", "pe_spad"), ("simba", "pe_wb")):
+        tab = columns.TrafficTable.map_specs([spec], _arch(arch_name))
+        agg = tab.aggregate()
+        assert math.isclose(agg["gwb"].read_bits, agg[pe_level].write_bits,
+                            rel_tol=1e-12, abs_tol=1e-9)
+        for tr in agg.values():
+            assert tr.read_bits >= 0 and tr.write_bits >= 0
+    # CPU moves compulsory traffic exactly once
+    cpu = columns.TrafficTable.map_specs([spec], _arch("cpu")).aggregate()
+    assert cpu["weight_mem"].read_bits == spec.weight_bytes * 8
+    assert cpu["act_mem"].read_bits == spec.in_bytes * 8
+
+
+# ---------------------------------------------------------------------------
+# property: counts are monotone in layer size (fixed arch)
+# ---------------------------------------------------------------------------
+
+def _total_bits(tab):
+    return float(tab.read_bits.sum() + tab.write_bits.sum())
+
+
+@given(**spec_strategy)
+@settings(max_examples=40, deadline=None)
+def test_traffic_monotone_in_layer_size(kind, cin, cout, hw, k, stride):
+    """On a FIXED arch, growing a layer (more channels / larger fmap) never
+    reduces total traffic."""
+    spec = _spec(kind, cin, cout, hw, k, stride)
+    bigger_ch = _spec(kind, cin, 2 * cout, hw, k, stride)
+    specs = [spec, bigger_ch]
+    if kind != "dense":
+        specs.append(_spec(kind, cin, cout, 2 * hw, k, stride))
+    for arch_name in ARCH_NAMES:
+        arch = _arch(arch_name)
+        base = _total_bits(columns.TrafficTable.map_specs([spec], arch))
+        for big in specs[1:]:
+            grown = _total_bits(columns.TrafficTable.map_specs([big], arch))
+            assert grown >= base - 1e-9, (arch_name, big)
+
+
+# ---------------------------------------------------------------------------
+# property: scalar-vs-columnar PRICING parity on random layers
+# ---------------------------------------------------------------------------
+
+@given(variant=st.sampled_from(["sram", "p0", "p1"]),
+       node=st.sampled_from([45, 28, 7]),
+       device=st.sampled_from(["stt", "sot", "vgsot"]),
+       **spec_strategy)
+@settings(max_examples=30, deadline=None)
+def test_columnar_pricing_matches_scalar_on_random_specs(
+        variant, node, device, kind, cin, cout, hw, k, stride):
+    from repro.core.archspec import apply_variant
+    spec = _spec(kind, cin, cout, hw, k, stride)
+    for arch_name in ARCH_NAMES:
+        base = _arch(arch_name)
+        applied = apply_variant(base, variant, device)
+        ref = price(map_workload([spec], base), applied, node, "rand",
+                    variant, device)
+        point = DesignPoint(workload="rand", arch=arch_name, node=node,
+                            variant=variant, nvm=device)
+        tt = columns.TrafficTable.map_specs([spec], base)
+        tab = energy.price_space([tt], [0], [point], [device])
+        row = tab.row(0)
+        for attr in ("total_pj", "mem_pj", "latency_s", "standby_w",
+                     "compute_pj", "delivery_pj"):
+            assert math.isclose(getattr(row, attr), getattr(ref, attr),
+                                rel_tol=1e-9, abs_tol=1e-18), \
+                (arch_name, attr)
+        assert row.bottleneck == ref.bottleneck
+        # area plane: vectorized entry point vs scalar oracle
+        arow = area_mod.area_space([tt], [0], [point], [device]).row(0)
+        aref = area_mod.area(applied, node, variant)
+        assert math.isclose(arow.total_mm2, aref.total_mm2, rel_tol=1e-9)
+        assert math.isclose(arow.memory_mm2, aref.memory_mm2, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# power curves: whole-surface and single-report vectorized paths vs scalar
+# ---------------------------------------------------------------------------
+
+def test_power_curves_match_scalar_including_weight_class():
+    """The (P, G) Fig-5 surface AND the weight-class curves must match the
+    scalar per-(report, ips) oracles to 1e-9."""
+    ev = xp.Evaluator()
+    space = xp.fig5_space()
+    table = ev.evaluate_table(space)
+    rs = ev.evaluate(space)
+    ips_grid = np.logspace(-2, 2, 9)
+    power = nvm_mod.memory_power_curves(table, ips_grid)
+    for i, (p, r) in enumerate(rs):
+        curve = nvm_mod.memory_power_curve(r, ips_grid)   # one-report path
+        for g, ips in enumerate(ips_grid):
+            ips = float(ips)
+            assert power.p_mem_w[i, g] == pytest.approx(
+                nvm_mod.memory_power_w(r, ips), rel=1e-9)
+            assert power.p_weight_w[i, g] == pytest.approx(
+                nvm_mod.weight_memory_power_w(r, ips), rel=1e-9)
+            assert curve[g] == pytest.approx(power.p_mem_w[i, g], rel=1e-12)
+        assert table.weight_memory_power_at(10.0)[i] == pytest.approx(
+            nvm_mod.weight_memory_power_w(r, 10.0), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# nvm.crossover_ips edge cases (scalar oracle + batched bisection)
+# ---------------------------------------------------------------------------
+
+def _report(mem_pj, standby_w, latency_s, tech="vgsot", sram_leak_w=0.0):
+    lev = {"gwb": LevelEnergy(read_pj=mem_pj, write_pj=0.0,
+                              standby_w=standby_w, tech=tech, cls="weight",
+                              read_power_w=0.0, sram_leak_w=sram_leak_w)}
+    return EnergyReport("simba", "p1" if tech != "sram" else "sram",
+                        "vgsot", 7, "synthetic", 1000, 0.0, 0.0, lev,
+                        latency_s, 1.0, "compute")
+
+
+def test_crossover_never_saves_returns_none():
+    """NVM costlier per inference and no standby to eliminate -> None."""
+    nvm_rep = _report(200.0, 0.0, 1e-3)
+    sram_rep = _report(100.0, 0.0, 1e-3, tech="sram")
+    assert nvm_mod.crossover_ips(nvm_rep, sram_rep) is None
+
+
+def test_crossover_saves_everywhere_returns_max_ips_cap():
+    """NVM cheaper per inference AND standby elimination -> capped at the
+    memory-limited max rate."""
+    nvm_rep = _report(50.0, 0.0, 1e-3, sram_leak_w=1e-7)
+    sram_rep = _report(100.0, 1e-3, 1e-3, tech="sram")
+    xo = nvm_mod.crossover_ips(nvm_rep, sram_rep)
+    assert xo == pytest.approx(nvm_rep.max_ips)
+    assert xo == pytest.approx(1e3)
+
+
+def test_crossover_bisection_converges_to_analytic_root():
+    """Extreme IPS range (max_ips = 1e7, root ~1e4): the geometric bisection
+    bracket must converge to the closed-form cross-over."""
+    en, es = 200.0, 100.0                 # pJ per inference
+    s_s, lat = 1e-6, 1e-7                 # sram standby W, latency s
+    nvm_rep = _report(en, 0.0, lat)
+    sram_rep = _report(es, s_s, lat, tech="sram")
+    # duty << 1 regime: x* = S_s / (E_n - E_s + S_s * lat)
+    analytic = s_s / ((en - es) * 1e-12 + s_s * lat)
+    xo = nvm_mod.crossover_ips(nvm_rep, sram_rep)
+    assert xo == pytest.approx(analytic, rel=1e-6)
+    assert 1e-4 < xo < nvm_rep.max_ips
+
+
+def test_crossover_batched_matches_scalar_on_fig5_space():
+    """Every (MRAM, SRAM) pair of the Fig-5 space: batched bisection ==
+    scalar oracle (NaN <-> None)."""
+    ev = xp.Evaluator()
+    space = xp.fig5_space()
+    pts = list(space)
+    table = ev.evaluate_table(space)
+    rs = ev.evaluate(space)
+    mram, pair = nvm_mod.sram_pairs(pts)
+    for i, s in zip(mram, pair):
+        assert pts[s].variant == "sram"
+        assert (pts[s].workload_name, pts[s].arch) == \
+            (pts[i].workload_name, pts[i].arch)
+    batched = nvm_mod.crossover_ips_batch(table, mram, pair)
+    for k, i in enumerate(mram):
+        scalar = nvm_mod.crossover_ips(rs[pts[i]], rs[pts[pair[k]]])
+        if scalar is None:
+            assert math.isnan(batched[k])
+        else:
+            assert batched[k] == pytest.approx(scalar, rel=1e-9)
+
+
+def test_crossover_batched_extreme_bracket():
+    """Batched path on synthetic extreme brackets: mixed None / cap /
+    interior roots in one call."""
+    reps = [
+        _report(200.0, 0.0, 1e-3),                      # never saves
+        _report(50.0, 0.0, 1e-3, sram_leak_w=1e-7),     # saves everywhere
+        _report(200.0, 0.0, 1e-7),                      # interior root
+        _report(100.0, 0.0, 1e-3, tech="sram"),         # sram for 0
+        _report(100.0, 1e-3, 1e-3, tech="sram"),        # sram for 1
+        _report(100.0, 1e-6, 1e-7, tech="sram"),        # sram for 2
+    ]
+    # assemble an EnergyTable-like view via the scalar fallback: use the
+    # batched API through a synthetic table built from one-point pricings
+    class _T:
+        mem_pj = np.array([r.mem_pj for r in reps])
+        latency_s = np.array([r.latency_s for r in reps])
+        standby_w = np.array([r.standby_w for r in reps])
+        wake_energy_j = np.array([nvm_mod.wake_energy_j(r) for r in reps])
+        max_ips = 1.0 / latency_s
+
+    out = columns.crossover_ips(_T, [0, 1, 2], [3, 4, 5])
+    assert math.isnan(out[0])
+    assert out[1] == pytest.approx(1e3)
+    s_s, lat = 1e-6, 1e-7
+    analytic = s_s / (100.0 * 1e-12 + s_s * lat)
+    assert out[2] == pytest.approx(analytic, rel=1e-6)

@@ -76,6 +76,31 @@ def test_collective_bytes_parser():
     assert out["all-to-all"] == 16 * 16 * 2
 
 
+# Optimized HLO dumps disambiguate repeated ops with `.N` suffixes on the
+# OPCODE itself; the old `[a-z\-]+` matcher silently dropped all of these.
+HLO_SUFFIXED = """
+  %aa.1 = bf16[128,64]{1,0} all-to-all.1(%w), dimensions={0}
+  %ar.23 = f32[16]{0} all-reduce.23(%x), to_apply=%add
+  %ags.2 = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-gather-start.2(%v)
+  %agd.2 = bf16[8,8]{1,0} all-gather-done.2(%ags.2)
+  %cps.1 = (f32[32]{0}, f32[32]{0}, u32[]) collective-permute-start.1(%z)
+  %cpd.1 = f32[32]{0} collective-permute-done.1(%cps.1)
+  %fused = f32[999]{0} fusion.3(%a, %b), kind=kLoop
+  ROOT %ar.root = f32[16]{0} all-reduce.7(%y), to_apply=%add
+"""
+
+
+def test_collective_bytes_suffixed_opcodes():
+    out = rl.collective_bytes(HLO_SUFFIXED)
+    assert out["all-to-all"] == 128 * 64 * 2
+    # one plain suffixed op + one ROOT-prefixed op (the usual final reduce)
+    assert out["all-reduce"] == 2 * (16 * 4)
+    # async pairs count once: -start carries the (tuple) shape, -done skipped
+    assert out["all-gather"] == 2 * (8 * 8 * 2)
+    assert out["collective-permute"] == 2 * (32 * 4) + 4
+    assert out["reduce-scatter"] == 0
+
+
 def test_roofline_terms():
     r = rl.Roofline("a", "s", "m", chips=4, hlo_flops=4 * 197e12,
                     hlo_bytes=4 * 819e9, coll_bytes=0.0, coll_by_kind={},

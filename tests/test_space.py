@@ -69,6 +69,67 @@ def test_parity_evaluate_single_point():
 
 
 # ---------------------------------------------------------------------------
+# columnar vs scalar row identity (every registered paper space)
+# ---------------------------------------------------------------------------
+
+def _sweep_space(name):
+    if name == "lm_kv":                    # keep extraction small in CI
+        return xp.SWEEPS[name].space(arch_names=("simba",))
+    return xp.SWEEPS[name].space()
+
+
+@pytest.mark.parametrize("sweep", sorted(xp.SWEEPS))
+def test_columnar_rows_identical_to_scalar_path(sweep):
+    """The EnergyTable columns must be row-identical (<=1e-9) to the scalar
+    dataclass pipeline for every registered paper space."""
+    space = _sweep_space(sweep)
+    table = xp.Evaluator().evaluate_table(space)
+    scalar = xp.Evaluator().evaluate(space, batched=False)
+    assert len(table) == len(scalar)
+    for i, (p, r) in enumerate(scalar):
+        row = table.row(i)
+        assert table.points[i] == p
+        for attr in ("total_pj", "mem_pj", "mem_read_pj", "mem_write_pj",
+                     "buffer_pj", "compute_pj", "delivery_pj", "latency_s",
+                     "standby_w", "weight_standby_w", "edp", "max_ips"):
+            col = float(table.column(attr)[i])
+            ref = float(getattr(r, attr))
+            assert math.isclose(col, ref, rel_tol=1e-9, abs_tol=1e-18), \
+                (sweep, i, attr, col, ref)
+            assert math.isclose(float(getattr(row, attr)), ref,
+                                rel_tol=1e-9, abs_tol=1e-18)
+        assert row.bottleneck == r.bottleneck
+        assert row.nvm == r.nvm and row.macs == r.macs
+        assert row.levels.keys() == r.levels.keys()
+        for name, lv in r.levels.items():
+            cv = row.levels[name]
+            assert cv.tech == lv.tech and cv.cls == lv.cls
+            for f in ("read_pj", "write_pj", "standby_w", "read_power_w",
+                      "sram_leak_w"):
+                assert math.isclose(getattr(cv, f), getattr(lv, f),
+                                    rel_tol=1e-9, abs_tol=1e-18), \
+                    (sweep, i, name, f)
+
+
+@pytest.mark.parametrize("sweep", ["table2", "table3", "fig3d"])
+def test_area_table_identical_to_scalar_path(sweep):
+    space = _sweep_space(sweep)
+    table = xp.Evaluator().area_table(space)
+    ev = xp.Evaluator()
+    for i, p in enumerate(space):
+        ref = ev.area(p)
+        row = table.row(i)
+        assert math.isclose(row.total_mm2, ref.total_mm2, rel_tol=1e-9)
+        assert math.isclose(row.compute_mm2, ref.compute_mm2, rel_tol=1e-9)
+        assert row.levels.keys() == ref.levels.keys()
+        for name in ref.levels:
+            assert math.isclose(row.levels[name], ref.levels[name],
+                                rel_tol=1e-9, abs_tol=1e-18)
+        assert float(table.total_mm2[i]) == pytest.approx(ref.total_mm2,
+                                                          rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # DesignSpace mechanics
 # ---------------------------------------------------------------------------
 
@@ -157,8 +218,20 @@ def test_specs_extracted_once_across_space():
 def test_mapping_shared_across_variants_and_nodes():
     ev = xp.Evaluator()
     ev.evaluate(xp.fig3d_space())          # 2 workloads x 3 archs x 3 x 2
-    hits, misses = ev.cache_info()["map"]
+    hits, misses = ev.cache_info()["traffic"]
     assert misses == 6                     # one mapping per (workload, arch)
+
+
+def test_plan_cached_across_repricings():
+    """The gridsearch hot loop: same space re-priced -> plan cache hit."""
+    ev = xp.Evaluator(cache_reports=False)
+    space = xp.table3_space()
+    ev.evaluate_table(space)
+    ev.evaluate_table(space)
+    hits, misses = ev.cache_info()["plan"]
+    assert (hits, misses) == (1, 1)
+    hits, misses = ev.cache_info()["traffic"]
+    assert misses == 4                     # one mapping per (workload, arch)
 
 
 def test_report_cache_hits_on_reevaluation():

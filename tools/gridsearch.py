@@ -4,12 +4,16 @@ Tunes ONLY device-table constants (leakage, cell-energy fraction, VGSOT
 asymmetry) — never the dataflow mechanics. Prints the best configs; the
 winner gets frozen into devices.py.
 
-Runs on the experiment API with a single shared ``Evaluator``: workload
-extraction, suite buffer sizing, arch construction and dataflow mapping are
-memoized ONCE across the whole grid (they are untouched by device-constant
-mutation), so each grid cell pays only the analytic pricing — the seed
+Runs on the columnar pricing core with a single shared ``Evaluator``:
+workload extraction, suite buffer sizing, arch construction, dataflow
+mapping AND the space's flattened ``PricingPlan`` are memoized ONCE across
+the whole grid (all pure geometry, untouched by device-constant mutation),
+so each grid cell is one vectorized ``EnergyTable`` pricing plus a batched
+savings computation — no per-point Python objects at all. The seed
 implementation re-extracted and re-mapped the same 4 (workload, arch) pairs
-for every cell. ``benchmarks/bench_gridsearch.py`` records the speedup.
+for every cell; the PR-1 Evaluator cached the structure but still built
+``EnergyReport`` dataclasses per point per cell.
+``benchmarks/bench_gridsearch.py`` records the speedups of both steps.
 
     PYTHONPATH=src python tools/gridsearch.py [--limit N] [--top K]
 """
@@ -17,6 +21,8 @@ import argparse
 import itertools
 import os
 import sys
+
+import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -41,9 +47,42 @@ GRID = dict(
 
 SPACE = table3_space(node=7)
 
+# Row indices of SPACE for the vectorized score: per (workload, arch) pair
+# the (sram, p0, p1) rows, plus flat (nvm, sram, ips) arrays for the batched
+# savings call. Pure structure — computed once at import.
+_ROW = {(p.workload_name, p.arch, p.variant): i
+        for i, p in enumerate(SPACE)}
+_PAIRS = [(w, a, _ROW[(w, a, "sram")], _ROW[(w, a, "p0")],
+           _ROW[(w, a, "p1")]) for (w, a) in T3]
+_NVM_ROWS = np.array([r for (_, _, _, p0, p1) in _PAIRS for r in (p0, p1)])
+_SRAM_ROWS = np.array([s for (_, _, s, _, _) in _PAIRS for _ in (0, 1)])
+_IPS = np.array([IPS_MIN[w] for (w, _, _, _, _) in _PAIRS for _ in (0, 1)])
+
 
 def score(ev: Evaluator):
-    """Squared error of the Table-3 savings grid vs the paper targets."""
+    """Squared error of the Table-3 savings grid vs the paper targets.
+
+    Columnar: one vectorized ``EnergyTable`` for the whole space, one
+    batched savings evaluation for all 8 (variant, baseline) pairs."""
+    table = ev.evaluate_table(SPACE)
+    s = nvm_mod.savings_at_ips_batch(table, _NVM_ROWS, _SRAM_ROWS, _IPS)
+    err = 0.0
+    out = {}
+    for k, (w, a, *_rows) in enumerate(_PAIRS):
+        s0, s1 = float(s[2 * k]), float(s[2 * k + 1])
+        out[(w, a)] = (s0, s1)
+        t0, t1 = T3[(w, a)]
+        err += (s0 - t0) ** 2 + (s1 - t1) ** 2
+    return err, out
+
+
+def score_reports(ev: Evaluator):
+    """Row-view path: ``ev.evaluate()`` (columnar pricing inside, but
+    materializing per-point ``EnergyReport`` views) + scalar savings.
+    Timed by ``benchmarks/bench_gridsearch.py`` as the "evaluate() row
+    views" line — it measures the dataclass-materialization overhead the
+    pure-table ``score`` avoids. The frozen PR-1 baseline that anchors the
+    CI speedup gate is ``bench_gridsearch.py::pr1_score``."""
     err = 0.0
     out = {}
     results = ev.evaluate(SPACE)

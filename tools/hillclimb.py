@@ -19,7 +19,6 @@ import argparse
 import collections
 import dataclasses
 import os
-import re
 import sys
 import time
 
@@ -46,12 +45,13 @@ def profile_hlo(hlo: str, top: int = 18):
     by_op = collections.Counter()
     biggest = []
     for line in hlo.splitlines():
-        m = re.match(r"\s*[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", line)
-        if not m:
+        parsed = rl.parse_op(line)
+        if parsed is None:
             continue
-        b = rl._shape_bytes(m.group(1))
-        by_op[m.group(2)] += b
-        biggest.append((b, m.group(2), m.group(1)[:60]))
+        shape, op = parsed
+        b = rl._shape_bytes(shape)
+        by_op[op] += b
+        biggest.append((b, op, shape[:60]))
     print("\n-- bytes by opcode (result shapes, per-device HLO) --")
     for op, b in by_op.most_common(top):
         print(f"   {op:<28}{b/1e9:10.2f} GB")
@@ -74,7 +74,12 @@ DSE_AXES = dict(
 
 
 def dse_main(a):
-    from repro.core.experiment import Evaluator, metric_fn, pmem_at
+    """Greedy local search on the COLUMNAR path: every neighborhood is one
+    ``EnergyTable`` pricing (a single vectorized pass over ~16 points) and
+    the objective is a table column — no per-point report objects."""
+    import numpy as np
+
+    from repro.core.experiment import Evaluator
     from repro.core.space import DesignPoint, DesignSpace
 
     if a.objective == "edp":
@@ -84,40 +89,47 @@ def dse_main(a):
         metric = "total_pj"
         fmt = lambda v: f"E={v/1e6:.2f} uJ"
     else:
-        metric = pmem_at(a.ips)
+        metric = "pmem"
         fmt = lambda v: f"P_mem@{a.ips}ips={v*1e6:.1f} uW"
 
     ev = Evaluator()
-    f = metric_fn(metric)
+
+    def best_of(space):
+        """(point, metric value, table row) of the space's argmin column."""
+        table = ev.evaluate_table(space)
+        vals = table.column(metric, ips=a.ips)
+        i = int(np.argmin(vals))
+        return table.points[i], float(vals[i]), (table, i)
+
     point = DesignPoint(workload=a.workload, arch="cpu", node=45,
                         variant="sram")
-    rs = ev.evaluate([point])
-    best = rs.best(metric)
+    best = best_of(DesignSpace.from_points([point], name="start"))
     t0 = time.monotonic()
     print(f"=== DSE hillclimb: {a.workload}, objective {a.objective} ===")
     step = 0
     while True:
-        cur_point, _ = best
+        cur_point = best[0]
         neighbors = [cur_point.with_(**{axis: v})
                      for axis, values in DSE_AXES.items()
                      for v in values if v != getattr(cur_point, axis)]
         hood = DesignSpace.from_points([cur_point] + neighbors,
                                        name=f"hood{step}")
-        cand = ev.evaluate(hood).best(metric)
-        if f(*cand) >= f(*best):
+        cand = best_of(hood)
+        if cand[1] >= best[1]:
             break
         best = cand
         step += 1
-        p, r = best
+        p = best[0]
         print(f"  step {step}: {p.arch}/{p.node}nm/{p.variant}"
-              f"/{p.nvm or 'auto'}/{p.pe_config}  {fmt(f(p, r))}")
-    p, r = best
-    hits, misses = ev.cache_info()["map"]
+              f"/{p.nvm or 'auto'}/{p.pe_config}  {fmt(best[1])}")
+    p, val, (table, i) = best
+    hits, misses = ev.cache_info()["traffic"]
     print(f"\nlocal optimum after {step} steps "
-          f"({time.monotonic()-t0:.1f}s, map cache {hits}h/{misses}m):")
+          f"({time.monotonic()-t0:.1f}s, traffic cache {hits}h/{misses}m):")
     print(f"  {p.arch} @ {p.node}nm, {p.variant}/{p.nvm or 'auto'}, "
-          f"pe={p.pe_config}: {fmt(f(p, r))}  "
-          f"lat={r.latency_s*1e3:.2f}ms  E={r.total_pj/1e6:.2f}uJ")
+          f"pe={p.pe_config}: {fmt(val)}  "
+          f"lat={float(table.latency_s[i])*1e3:.2f}ms  "
+          f"E={float(table.total_pj[i])/1e6:.2f}uJ")
 
 
 # ---------------------------------------------------------------------------
