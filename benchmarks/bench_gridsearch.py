@@ -11,10 +11,15 @@ implementations of the same score:
                 still materializes per-point ``EnergyReport``/``LevelEnergy``
                 dataclasses and calls scalar ``savings_at_ips`` per pair
                 (``tools.gridsearch.score_reports``).
-  * columnar  — this PR: one cached ``PricingPlan`` for the space, one
-                vectorized ``EnergyTable`` pricing + one batched savings
-                call per cell; no per-point Python objects
+  * columnar  — one cached ``PricingPlan`` for the space, one vectorized
+                ``EnergyTable`` pricing + one batched savings call per
+                cell; no per-point Python objects
                 (``tools.gridsearch.score``).
+
+A mixed-precision (w4a8) corner of the same space is timed alongside the
+int8 columnar cell: per-layer operand widths live in the traffic columns,
+so the two cells must cost the same — ``--check`` gates the ratio to catch
+per-element-width work leaking into the pricing hot path.
 
     PYTHONPATH=src python benchmarks/bench_gridsearch.py [--cells 12]
         [--check benchmarks/baseline_gridsearch.json]
@@ -204,11 +209,18 @@ def measure(cells, repeats=3):
     ev_col = Evaluator(cache_reports=False)
     ev_row = Evaluator(cache_reports=False)
     ev_pr1 = Evaluator(cache_reports=False)
+    ev_w4a8 = Evaluator(cache_reports=False)
+    # mixed-precision (w4a8) corner of the same scoring space: times the
+    # columnar hot path with per-layer operand-width columns in play —
+    # guards against per-element-width regressions in pricing
+    space_w4a8 = gridsearch.build_space(weight_bits=4, act_bits=8)
+    idx_w4a8 = gridsearch.build_indices(space_w4a8)
     # warm the structural/plan caches outside the timed region (the full
     # 216-cell search amortizes this in the first cell)
     gridsearch.score(ev_col)
     gridsearch.score_reports(ev_row)
     pr1_score(ev_pr1)
+    gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8)
 
     def best_of(score_fn):
         """Min wall time over ``repeats`` passes (noise suppression)."""
@@ -222,6 +234,8 @@ def measure(cells, repeats=3):
     t_row, errs_row = best_of(lambda: gridsearch.score_reports(ev_row))
     t_pr1, errs_pr1 = best_of(lambda: pr1_score(ev_pr1))
     t_seed, errs_seed = best_of(seed_score)
+    t_w4a8, _ = best_of(
+        lambda: gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8))
 
     for ec, ev_, e1, es in zip(errs_col, errs_row, errs_pr1, errs_seed):
         assert math.isclose(ec, es, rel_tol=1e-9), (ec, es)
@@ -234,10 +248,12 @@ def measure(cells, repeats=3):
         pr1_ms_per_cell=t_pr1 / cells * 1e3,
         rowview_ms_per_cell=t_row / cells * 1e3,
         columnar_ms_per_cell=t_col / cells * 1e3,
+        w4a8_ms_per_cell=t_w4a8 / cells * 1e3,
         speedup_pr1_vs_seed=t_seed / t_pr1,
         speedup_columnar_vs_seed=t_seed / t_col,
         speedup_columnar_vs_pr1=t_pr1 / t_col,
         speedup_columnar_vs_rowview=t_row / t_col,
+        ratio_w4a8_vs_int8=t_w4a8 / t_col,
     )
 
 
@@ -264,6 +280,8 @@ def main():
           f" ms/cell")
     print(f"columnar EnergyTable:       {m['columnar_ms_per_cell']:8.2f}"
           f" ms/cell  {m['speedup_columnar_vs_seed']:6.1f}x")
+    print(f"columnar w4a8 corner:       {m['w4a8_ms_per_cell']:8.2f}"
+          f" ms/cell  ({m['ratio_w4a8_vs_int8']:.2f}x int8 cell)")
     print(f"columnar vs PR-1 Evaluator: {m['speedup_columnar_vs_pr1']:.1f}x")
 
     if a.write_baseline:
@@ -278,8 +296,24 @@ def main():
         print(f"check: columnar-vs-PR1 speedup {got:.1f}x "
               f"(baseline {base['speedup_columnar_vs_pr1']:.1f}x, "
               f"floor {floor:.1f}x)")
-        if got < floor:
+        failed = got < floor
+        if failed:
             print("FAIL: >2x regression of the columnar speedup ratio")
+        # mixed-precision guard: a w4a8 cell prices the same-shaped plan, so
+        # it must not drift away from the int8 cell (catches per-element-
+        # width work leaking into the columnar hot path)
+        base_q = base.get("ratio_w4a8_vs_int8")
+        if base_q is not None:
+            # sub-ms cells are noisy; clamp the reference ratio to >=1 so
+            # the gate only trips on a genuine (multi-x) width regression
+            ceil_q = max(base_q, 1.0) * 2.0
+            got_q = m["ratio_w4a8_vs_int8"]
+            print(f"check: w4a8-vs-int8 cell ratio {got_q:.2f} "
+                  f"(baseline {base_q:.2f}, ceiling {ceil_q:.2f})")
+            if got_q > ceil_q:
+                print("FAIL: >2x regression of the mixed-precision cell")
+                failed = True
+        if failed:
             sys.exit(1)
         print("OK")
 

@@ -128,10 +128,26 @@ def lm_kv_dse() -> Tuple[List[Dict], str]:
     """Beyond-paper: P0/P1 question applied to an edge-LM decode step."""
     rows = xp.SWEEPS["lm_kv"].rows(arch_names=("simba",),
                                    archs=("llama3.2-1b",), context_len=4096)
-    best = max(rows, key=lambda r: r["savings_at_10tok_s"])
+    best = max(rows, key=lambda r: r["savings_at_ips"])
     return rows, (f"best: {best['variant']}/{best['device']} saves "
-                  f"{best['savings_at_10tok_s']:+.0%} @10tok/s")
+                  f"{best['savings_at_ips']:+.0%} "
+                  f"@{best['savings_ips']:.3g}tok/s")
+
+
+def quant_axis() -> Tuple[List[Dict], str]:
+    """Beyond-paper: precision corners (INT8/W4A8/INT4) x MRAM placement."""
+    rows = xp.SWEEPS["quant"].rows()
+    xo = {r["precision"]: r["crossover_ips"] for r in rows
+          if (r["workload"], r["arch"], r["variant"])
+          == ("detnet", "simba", "p1")}
+
+    def fmt(x):
+        return "never" if x is None else f"{x:.0f}"
+
+    return rows, (f"detnet/simba P1 crossover "
+                  f"int8 {fmt(xo['int8'])} -> int4 {fmt(xo['int4'])} IPS")
 
 
 ALL = [fig1_quant, fig2e_energy_breakdown, fig2f_edp, fig3d_nvm_energy,
-       fig4_breakdown, fig5_power_ips, table2_area, table3_ips, lm_kv_dse]
+       fig4_breakdown, fig5_power_ips, table2_area, table3_ips, lm_kv_dse,
+       quant_axis]

@@ -82,8 +82,19 @@ print("\n=== Beyond-paper: edge-LM KV-cache DSE ===")
 for r in SWEEPS["lm_kv"].rows(ev, arch_names=("simba",),
                               archs=("llama3.2-1b",)):
     print(f"  {r['model']} {r['variant']}/{r['device']:6s}: "
-          f"savings@10tok/s {r['savings_at_10tok_s']:+.0%}  "
+          f"savings@{r['savings_ips']:.3g}tok/s {r['savings_at_ips']:+.0%}  "
           f"crossover {r['crossover_tok_s'] and round(r['crossover_tok_s'],1)} tok/s")
+
+# --- Precision axis: how quantization moves the SRAM-vs-MRAM trade-off ----
+print("\n=== Precision axis (SWEEPS['quant']): simba @7nm ===")
+print(f"  {'workload':10s} {'corner':6s} {'variant':7s} "
+      f"{'E (uJ)':>8s} {'area mm2':>9s} {'xover IPS':>10s}")
+for r in SWEEPS["quant"].rows(ev):
+    if r["arch"] != "simba" or r["variant"] == "p0":
+        continue
+    xo = "-" if r["crossover_ips"] is None else f"{r['crossover_ips']:.1f}"
+    print(f"  {r['workload']:10s} {r['precision']:6s} {r['variant']:7s} "
+          f"{r['energy_uj']:8.1f} {r['total_mm2']:9.2f} {xo:>10s}")
 
 # Frontier helpers: which (arch, variant, device) corners are Pareto-optimal
 # in (EDP, P_mem@IPS_min) for DetNet at 7nm?

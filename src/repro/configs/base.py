@@ -186,7 +186,14 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class ConvLayerSpec:
-    """One conv layer for the DSE workload extractor (paper plane)."""
+    """One conv layer for the DSE workload extractor (paper plane).
+
+    Operand bit-widths are per-layer fields so mixed-precision networks
+    (e.g. INT4 weight-only quantization of a KV cache) price each operand
+    class at its stored width. ``psum_bits=None`` derives the accumulator
+    width from the operand widths (``psum_width``); the INT8 default
+    reproduces the paper's 8b x 8b -> 24b datapath exactly.
+    """
     name: str
     kind: str            # conv | dwconv | dense
     in_ch: int
@@ -194,6 +201,17 @@ class ConvLayerSpec:
     kernel: int          # k (square) ; 1 for dense
     stride: int
     in_hw: Tuple[int, int]
+    weight_bits: int = 8           # stored weight operand width
+    act_bits: int = 8              # stored activation operand width
+    psum_bits: Optional[int] = None  # None -> weight_bits + act_bits + 8
+
+    @property
+    def psum_width(self) -> int:
+        """Partial-sum width: product width plus 8 guard bits for the
+        reduction (8+8+8 = the paper's 24b INT8 psums)."""
+        if self.psum_bits is not None:
+            return self.psum_bits
+        return self.weight_bits + self.act_bits + 8
 
     @property
     def out_hw(self) -> Tuple[int, int]:
@@ -209,8 +227,9 @@ class ConvLayerSpec:
             return self.in_ch * self.out_ch
         return oh * ow * self.out_ch * self.in_ch * self.kernel * self.kernel
 
+    # --- element counts (precision-independent) ----------------------------
     @property
-    def weight_bytes(self) -> int:  # INT8
+    def weight_elems(self) -> int:
         if self.kind == "dwconv":
             return self.out_ch * self.kernel * self.kernel
         if self.kind == "dense":
@@ -218,13 +237,26 @@ class ConvLayerSpec:
         return self.in_ch * self.out_ch * self.kernel * self.kernel
 
     @property
-    def in_bytes(self) -> int:
+    def in_elems(self) -> int:
         return self.in_hw[0] * self.in_hw[1] * self.in_ch
 
     @property
-    def out_bytes(self) -> int:
+    def out_elems(self) -> int:
         oh, ow = self.out_hw
         return oh * ow * self.out_ch
+
+    # --- stored footprints (scale with the operand widths) -----------------
+    @property
+    def weight_bytes(self) -> int:
+        return (self.weight_elems * self.weight_bits + 7) // 8
+
+    @property
+    def in_bytes(self) -> int:
+        return (self.in_elems * self.act_bits + 7) // 8
+
+    @property
+    def out_bytes(self) -> int:
+        return (self.out_elems * self.act_bits + 7) // 8
 
 
 @dataclass(frozen=True)

@@ -41,6 +41,10 @@ class MemLevel:
     def capacity_kb(self) -> float:
         return self.macro_kb * self.count
 
+    @property
+    def capacity_bits(self) -> float:
+        return self.capacity_kb * 1024 * 8
+
 
 @dataclass(frozen=True)
 class ArchSpec:

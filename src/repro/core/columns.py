@@ -121,9 +121,14 @@ class TrafficTable:
         ops (same formulas as the scalar mappers in ``core.dataflow``)."""
         kw = cls._empty(arch, len(specs), [s.name for s in specs])
         col = {n: j for j, n in enumerate(kw["level_names"])}
-        W = np.array([s.weight_bytes for s in specs], float) * dfl.W_BITS
-        I = np.array([s.in_bytes for s in specs], float) * dfl.ACT_BITS
-        O = np.array([s.out_bytes for s in specs], float)
+        # per-layer operand widths (mixed precision: each layer prices its
+        # operands at their stored width, matching the scalar mappers)
+        wbits = np.array([s.weight_bits for s in specs], float)
+        abits = np.array([s.act_bits for s in specs], float)
+        pbits = np.array([s.psum_width for s in specs], float)
+        W = np.array([s.weight_elems for s in specs], float) * wbits
+        I = np.array([s.in_elems for s in specs], float) * abits
+        O = np.array([s.out_elems for s in specs], float)
         macs = np.array([s.macs for s in specs], float)
         is_dw = np.array([s.kind == "dwconv" for s in specs])
         out_ch = np.array([s.out_ch for s in specs], float)
@@ -137,10 +142,10 @@ class TrafficTable:
         if arch.dataflow == "sequential":
             rb[:, col["weight_mem"]] = W
             rb[:, col["act_mem"]] = I
-            wb[:, col["act_mem"]] = O * dfl.ACT_BITS
+            wb[:, col["act_mem"]] = O * abits
             kw["compute_cycles"] = macs / dfl.CPU_SIMD
         elif arch.dataflow == "weight":
-            wb_bits = arch.level("pe_wb").capacity_kb * 1024 * 8
+            wb_bits = arch.level("pe_wb").capacity_bits
             n_wtiles = np.maximum(1.0, np.ceil(W / wb_bits))
             resident = n_wtiles == 1
             n_kpasses = np.where(
@@ -156,8 +161,8 @@ class TrafficTable:
             rb[:, col["pe_wb"]] = W
             wb[:, col["input_buf"]] = I * rf
             rb[:, col["input_buf"]] = I * np.maximum(n_wtiles, n_kpasses) * rf
-            wb[:, col["accum_buf"]] = O * dfl.PSUM_BITS * n_ctiles
-            rb[:, col["accum_buf"]] = O * dfl.PSUM_BITS * n_ctiles
+            wb[:, col["accum_buf"]] = O * pbits * n_ctiles
+            rb[:, col["accum_buf"]] = O * pbits * n_ctiles
             kw["compute_cycles"] = macs / arch.num_pes
         elif arch.dataflow == "row":
             oh = np.array([s.out_hw[0] for s in specs], float)
@@ -168,8 +173,8 @@ class TrafficTable:
             rf = refetch(arch.level("glb").capacity_kb)
             rb[:, col["gwb"]] = W * n_strips
             wb[:, col["pe_spad"]] = W * n_strips
-            rb[:, col["pe_spad"]] = macs * dfl.W_BITS
-            wb[:, col["glb"]] = I * rf + O * dfl.PSUM_BITS
+            rb[:, col["pe_spad"]] = macs * wbits
+            wb[:, col["glb"]] = I * rf + O * pbits
             rb[:, col["glb"]] = I * n_ktiles * rf
             kw["compute_cycles"] = macs / arch.num_pes
         else:

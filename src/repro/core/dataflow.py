@@ -35,9 +35,11 @@ from typing import Dict, List, Sequence, Tuple
 from repro.configs.base import ConvLayerSpec
 from repro.core.archspec import ArchSpec
 
-PSUM_BITS = 24          # accumulator width (INT8 MACs, 24b psums)
-ACT_BITS = 8            # INT8 activations
-W_BITS = 8              # INT8 weights
+# Operand widths live on ``ConvLayerSpec`` (``weight_bits`` / ``act_bits``
+# / derived ``psum_width``, INT8 defaults): the mappers read the PER-LAYER
+# widths so mixed-precision workloads price every operand at its stored
+# width. The MAC array itself stays an INT8 datapath (DESIGN.md §5
+# §Precision), hence the fixed CPU SIMD factor below.
 CPU_SIMD = 8            # 64-bit datapath -> 8 INT8 MACs/cycle
 # Operand delivery (array NoC hops + operand-collector regfiles) per MAC,
 # pJ @ 45nm. Long wires across a 64x64 array make this the dominant "memory"
@@ -79,9 +81,9 @@ def _ceil(a: float, b: float) -> int:
 
 def _map_sequential(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t = {l.name: LevelTraffic() for l in arch.levels}
-    t["weight_mem"].read_bits = spec.weight_bytes * W_BITS
-    t["act_mem"].read_bits = spec.in_bytes * ACT_BITS
-    t["act_mem"].write_bits = spec.out_bytes * ACT_BITS
+    t["weight_mem"].read_bits = spec.weight_elems * spec.weight_bits
+    t["act_mem"].read_bits = spec.in_elems * spec.act_bits
+    t["act_mem"].write_bits = spec.out_elems * spec.act_bits
     cycles = spec.macs / CPU_SIMD
     return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs)
 
@@ -94,10 +96,10 @@ def _act_refetch(spec: ConvLayerSpec, act_capacity_kb: float) -> int:
 
 def _map_weight_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t = {l.name: LevelTraffic() for l in arch.levels}
-    W = spec.weight_bytes * W_BITS
-    I = spec.in_bytes * ACT_BITS
-    O = spec.out_bytes
-    wb_bits = arch.level("pe_wb").capacity_kb * 1024 * 8
+    W = spec.weight_elems * spec.weight_bits
+    I = spec.in_elems * spec.act_bits
+    O = spec.out_elems
+    wb_bits = arch.level("pe_wb").capacity_bits
 
     n_wtiles = max(1, _ceil(W, wb_bits))
     # Weight residency: when the full model fits the aggregate per-PE weight
@@ -123,8 +125,8 @@ def _map_weight_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t["pe_wb"].read_bits = W                       # into MAC operand regs once
     t["input_buf"].write_bits = I * refetch        # tiled fill (halo re-reads)
     t["input_buf"].read_bits = I * max(n_wtiles, n_kpasses) * refetch
-    t["accum_buf"].write_bits = O * PSUM_BITS * n_ctiles
-    t["accum_buf"].read_bits = O * PSUM_BITS * n_ctiles  # revisits + drain
+    t["accum_buf"].write_bits = O * spec.psum_width * n_ctiles
+    t["accum_buf"].read_bits = O * spec.psum_width * n_ctiles  # revisits + drain
 
     cycles = spec.macs / (arch.num_pes)
     return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs)
@@ -132,9 +134,9 @@ def _map_weight_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
 
 def _map_row_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t = {l.name: LevelTraffic() for l in arch.levels}
-    W = spec.weight_bytes * W_BITS
-    I = spec.in_bytes * ACT_BITS
-    O = spec.out_bytes
+    W = spec.weight_elems * spec.weight_bits
+    I = spec.in_elems * spec.act_bits
+    O = spec.out_elems
     oh, ow = spec.out_hw
 
     # output row-strips per pass; filters re-fetched per strip
@@ -148,10 +150,10 @@ def _map_row_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
 
     t["gwb"].read_bits = W * n_strips
     t["pe_spad"].write_bits = W * n_strips
-    t["pe_spad"].read_bits = spec.macs * W_BITS    # spad read EVERY MAC
+    t["pe_spad"].read_bits = spec.macs * spec.weight_bits  # spad read EVERY MAC
     # row-stationary keeps psums INSIDE the array (cross-PE accumulation);
     # the glb sees ifmap streams (read-heavy) plus a single psum drain.
-    t["glb"].write_bits = I * refetch + O * PSUM_BITS
+    t["glb"].write_bits = I * refetch + O * spec.psum_width
     t["glb"].read_bits = I * n_ktiles * refetch
 
     cycles = spec.macs / arch.num_pes
@@ -200,10 +202,12 @@ def total_macs(accesses: Sequence[LayerAccess]) -> int:
 
 
 def required_weight_kb(specs: Sequence[ConvLayerSpec]) -> float:
-    """Global weight buffer sizing rule: full INT8 model (DRAM-free)."""
+    """Global weight buffer sizing rule: full model at its stored weight
+    width (DRAM-free); INT4 weights halve the requirement."""
     return sum(s.weight_bytes for s in specs) / 1024.0
 
 
 def required_act_kb(specs: Sequence[ConvLayerSpec]) -> float:
-    """Activation buffer sizing rule: largest layer in+out working set."""
+    """Activation buffer sizing rule: largest layer in+out working set at
+    the stored activation width."""
     return max((s.in_bytes + s.out_bytes) for s in specs) / 1024.0

@@ -105,3 +105,13 @@ def lm_kv_dse(arch_names=("simba", "eyeriss"), node: int = 7,
     paper's P0/P1 question to decode-step workloads (DESIGN.md §2)."""
     return xp.SWEEPS["lm_kv"].rows(arch_names=arch_names, node=node,
                                    context_len=context_len, archs=archs)
+
+
+def sweep_quant(workloads=PAPER_SUITE, node: int = 7,
+                context_len: int = 4096,
+                lm_archs=("llama3.2-1b",)) -> List[Dict]:
+    """Precision axis: energy/latency/area + MRAM cross-over at the
+    INT8 / W4A8 / INT4 corners (DESIGN.md §5 §Precision)."""
+    return xp.SWEEPS["quant"].rows(workloads=workloads, node=node,
+                                   context_len=context_len,
+                                   lm_archs=lm_archs)

@@ -27,6 +27,7 @@ shims over this registry.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 from collections import OrderedDict
@@ -73,13 +74,32 @@ def extract_specs(workload: Workload, **kw) -> List[ConvLayerSpec]:
     return list(workload)
 
 
+Precision = Tuple[Optional[int], Optional[int], Optional[int]]
+_DEFAULT_BITS: Precision = (None, None, None)
+
+
+def apply_precision(specs: Sequence[ConvLayerSpec],
+                    bits: Precision) -> List[ConvLayerSpec]:
+    """Override the (weight, act, psum) operand widths of every layer;
+    ``None`` entries keep each spec's own width."""
+    changes = {k: v for k, v in zip(("weight_bits", "act_bits", "psum_bits"),
+                                    bits) if v is not None}
+    if not changes:
+        return list(specs)
+    return [dataclasses.replace(s, **changes) for s in specs]
+
+
 def size_arch(arch_name: str, specs: Sequence[ConvLayerSpec],
               pe_config: str = "v2",
               full_weight_kb: Optional[float] = None,
               full_act_kb: Optional[float] = None) -> ArchSpec:
     """Build the arch with workload-sized buffers (paper Fig 2d method)."""
-    w_kb = full_weight_kb if full_weight_kb else required_weight_kb(specs)
-    a_kb = full_act_kb if full_act_kb else required_act_kb(specs)
+    # `is not None`: a legitimate 0.0/tiny override must not silently
+    # re-derive the sizing from the specs (it still clamps to one bank).
+    w_kb = (full_weight_kb if full_weight_kb is not None
+            else required_weight_kb(specs))
+    a_kb = (full_act_kb if full_act_kb is not None
+            else required_act_kb(specs))
     a_kb = min(a_kb, ACT_CAP_KB)
     # round up to the bank size to avoid phantom fractional banks
     w_kb = max(256.0, math.ceil(w_kb / 256.0) * 256.0)
@@ -131,24 +151,31 @@ class Evaluator:
 
     # --- structural layers (always cached) ---------------------------------
     def specs(self, workload: Workload,
-              extract_kw: Tuple[Tuple[str, Any], ...] = ()
-              ) -> List[ConvLayerSpec]:
+              extract_kw: Tuple[Tuple[str, Any], ...] = (),
+              bits: Precision = _DEFAULT_BITS) -> List[ConvLayerSpec]:
         key = (workload if not isinstance(workload, list) else tuple(workload),
-               tuple(extract_kw))
+               tuple(extract_kw), tuple(bits))
         hit = key in self._specs
         self._tick("specs", hit)
         if not hit:
-            self._specs[key] = extract_specs(workload, **dict(extract_kw))
+            if any(b is not None for b in bits):
+                # derive from the cached default-width extraction: precision
+                # overrides never re-run the (jax-touching) extractor
+                base = self.specs(workload, extract_kw)
+                self._specs[key] = apply_precision(base, bits)
+            else:
+                self._specs[key] = extract_specs(workload, **dict(extract_kw))
         return self._specs[key]
 
-    def suite_sizes(self, suite: Sequence[str] = PAPER_SUITE
-                    ) -> Tuple[float, float]:
-        """(weight_kb, act_kb) sized for the max over the workload suite."""
-        key = tuple(suite)
+    def suite_sizes(self, suite: Sequence[str] = PAPER_SUITE,
+                    bits: Precision = _DEFAULT_BITS) -> Tuple[float, float]:
+        """(weight_kb, act_kb) sized for the max over the workload suite at
+        the given operand widths (one silicon design per precision corner)."""
+        key = (tuple(suite), tuple(bits))
         hit = key in self._suite
         self._tick("suite", hit)
         if not hit:
-            all_specs = [self.specs(w) for w in key]
+            all_specs = [self.specs(w, bits=bits) for w in key[0]]
             w_kb = max(required_weight_kb(s) for s in all_specs)
             a_kb = min(ACT_CAP_KB, max(required_act_kb(s) for s in all_specs))
             self._suite[key] = (w_kb, a_kb)
@@ -161,14 +188,15 @@ class Evaluator:
         for the workload alone)."""
         if (point.suite and isinstance(point.workload, str)
                 and point.workload in point.suite):
-            return self.suite_sizes(point.suite)
+            return self.suite_sizes(point.suite, bits=point.precision())
         return (None, None)
 
     def base_arch(self, point: DesignPoint) -> ArchSpec:
         """Sized, SRAM-technology arch for the point (variant not applied)."""
         w_kb, a_kb = self._sizing(point)
         if w_kb is None:
-            specs = self.specs(point.workload, point.extract_kw)
+            specs = self.specs(point.workload, point.extract_kw,
+                               bits=point.precision())
             key = (point.arch, point.pe_config, point.workload_key())
         else:
             specs = ()
@@ -190,7 +218,8 @@ class Evaluator:
         hit = key in self._maps
         self._tick("map", hit)
         if not hit:
-            specs = self.specs(point.workload, point.extract_kw)
+            specs = self.specs(point.workload, point.extract_kw,
+                               bits=point.precision())
             self._maps[key] = map_workload(specs, base)
         return self._maps[key]
 
@@ -204,7 +233,8 @@ class Evaluator:
         hit = key in self._traffic
         self._tick("traffic", hit)
         if not hit:
-            specs = self.specs(point.workload, point.extract_kw)
+            specs = self.specs(point.workload, point.extract_kw,
+                               bits=point.precision())
             self._traffic[key] = map_workload_columns(specs, base)
         return self._traffic[key]
 
@@ -433,17 +463,24 @@ class ResultSet:
 
     def pareto(self, *metrics: Metric) -> "ResultSet":
         """Non-dominated subset, all metrics minimized (e.g. ``pareto('edp',
-        pmem_at(10.0))`` or ``pareto('latency_s', 'total_pj')``)."""
+        pmem_at(10.0))`` or ``pareto('latency_s', 'total_pj')``).
+
+        Vectorized domination test: point i is dropped iff some j is <= in
+        every metric AND < in at least one (ties/duplicates all survive,
+        matching the scalar definition). Candidates are processed in
+        chunks so memory stays O(n * chunk * k), not O(n^2 * k)."""
+        if not self._pairs:
+            return ResultSet([], name=f"{self.name}:pareto")
         fns = [metric_fn(m) for m in metrics]
-        vals = [tuple(f(p, r) for f in fns) for p, r in self._pairs]
-        keep = []
-        for i, vi in enumerate(vals):
-            dominated = any(
-                all(vj[k] <= vi[k] for k in range(len(fns)))
-                and any(vj[k] < vi[k] for k in range(len(fns)))
-                for j, vj in enumerate(vals) if j != i)
-            if not dominated:
-                keep.append(self._pairs[i])
+        v = np.array([[f(p, r) for f in fns] for p, r in self._pairs], float)
+        dominated = np.zeros(len(v), bool)
+        chunk = 256
+        for c0 in range(0, len(v), chunk):
+            vc = v[c0:c0 + chunk]                            # candidates i
+            le = (v[:, None, :] <= vc[None, :, :]).all(axis=2)  # (n, c)
+            lt = (v[:, None, :] < vc[None, :, :]).any(axis=2)
+            dominated[c0:c0 + chunk] = (le & lt).any(axis=0)
+        keep = [pr for pr, d in zip(self._pairs, dominated) if not d]
         return ResultSet(keep, name=f"{self.name}:pareto")
 
 
@@ -655,13 +692,84 @@ def lm_kv_rows(ev: Evaluator, arch_names=SYSTOLICS, node: int = 7,
         if p.variant == "sram":
             continue
         s = sram[(p.workload, p.arch)]
+        # savings are evaluated at 10 tok/s OR the pipeline's max rate,
+        # whichever is lower — report the rate actually used instead of
+        # mislabeling the column as always-10-tok/s.
+        savings_ips = min(10.0, r.max_ips)
         rows.append(dict(
             model=p.workload, arch=p.arch, variant=p.variant, device=p.nvm,
             energy_mj=r.total_pj / 1e9,
             latency_ms=r.latency_s * 1e3,
             crossover_tok_s=nvm_mod.crossover_ips(r, s),
-            savings_at_10tok_s=nvm_mod.savings_at_ips(
-                r, s, min(10.0, r.max_ips))))
+            savings_ips=savings_ips,
+            savings_at_ips=nvm_mod.savings_at_ips(r, s, savings_ips)))
+    return rows
+
+
+# --- beyond-paper: mixed-precision (quantization) DSE ------------------------
+
+# The paper's first analysis step is quantization; these corners extend it
+# into a design-space axis. Each corner must agree with what the jax plane's
+# PTQ actually emits (``quant/ptq.py`` with ``bits=weight_bits`` /
+# ``bits=act_bits``) — the plane-agreement test in tests/test_quant_axis.py
+# ties the two. ``w4a8`` is weight-ONLY quantization: on LM decode specs the
+# KV cache is weight-class, so this corner is exactly the INT4-KV-cache
+# read-mostly scenario the P0 question targets.
+QUANT_CORNERS = (
+    Bind(weight_bits=8, act_bits=8),    # int8: the paper's baseline
+    Bind(weight_bits=4, act_bits=8),    # w4a8: weight-only (incl. KV cache)
+    Bind(weight_bits=4, act_bits=4),    # int4: fully quantized
+)
+
+
+def quant_space(workloads=PAPER_SUITE, node: int = 7,
+                context_len: int = 4096,
+                lm_archs=("llama3.2-1b",),
+                corners=QUANT_CORNERS) -> DesignSpace:
+    """Precision x variant space: XR suite + LM KV-cache workloads at every
+    quantization corner, SRAM baseline plus both MRAM placements."""
+    xr = DesignSpace.product(
+        "quant:xr", workload=workloads, arch=SYSTOLICS,
+        variant=("sram", "p0", "p1"), node=node, precision=corners)
+    kw = (("context_len", context_len),)
+    lm = DesignSpace.product(
+        "quant:lm", workload=lm_archs, arch=SYSTOLICS,
+        variant=("sram", "p0", "p1"), node=node, precision=corners,
+        extract_kw=[kw], suite=[None])
+    return xr + lm
+
+
+def quant_rows(ev: Evaluator, workloads=PAPER_SUITE, node: int = 7,
+               context_len: int = 4096,
+               lm_archs=("llama3.2-1b",)) -> List[Dict]:
+    """How precision shifts the SRAM-vs-MRAM trade-off: energy, latency,
+    area and the MRAM cross-over IPS per (workload, arch, corner).
+
+    Columnar end to end: one ``EnergyTable`` + one ``AreaTable`` for the
+    whole space, cross-overs via batched bisection against the SAME-corner
+    SRAM baseline (``sram_pairs`` keys include the operand widths)."""
+    space = quant_space(workloads, node, context_len, lm_archs)
+    pts = list(space)
+    table = ev.evaluate_table(space)
+    areas = ev.area_table(space)
+    mram, pair_s = nvm_mod.sram_pairs(pts)
+    xo = nvm_mod.crossover_ips_batch(table, mram, pair_s)
+    xo_at = {i: xo[k] for k, i in enumerate(mram)}
+    rows = []
+    for i, p in enumerate(pts):
+        x = xo_at.get(i)
+        rows.append(dict(
+            workload=p.workload_name, arch=p.arch, variant=p.variant,
+            device=table.plan.nvms[i] if p.variant != "sram" else None,
+            precision=p.precision_label,
+            weight_bits=p.weight_bits, act_bits=p.act_bits,
+            energy_uj=float(table.total_pj[i]) / 1e6,
+            mem_uj=float(table.mem_pj[i]) / 1e6,
+            latency_ms=float(table.latency_s[i]) * 1e3,
+            max_ips=float(table.max_ips[i]),
+            total_mm2=float(areas.total_mm2[i]),
+            crossover_ips=(None if x is None or math.isnan(x)
+                           else float(x))))
     return rows
 
 
@@ -680,4 +788,7 @@ SWEEPS: Dict[str, Sweep] = {
                     table3_space, table3_rows),
     "lm_kv": Sweep("lm_kv", "Beyond-paper: edge-LM KV-cache MRAM DSE",
                    lm_kv_space, lm_kv_rows),
+    "quant": Sweep("quant", "Beyond-paper: precision axis (INT8/W4A8/INT4) "
+                   "energy/latency/area + MRAM cross-over",
+                   quant_space, quant_rows),
 }

@@ -91,16 +91,25 @@ def crossover_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
 
 
 def sram_pairs(points):
-    """Pair every non-SRAM point with its (workload, arch) SRAM baseline.
+    """Pair every non-SRAM point with its SRAM baseline at the same
+    (workload, arch, operand widths).
 
     Returns ``(mram_rows, sram_rows)`` index lists into ``points`` — the
     row pairing every batched savings/cross-over call needs (Fig 5,
-    Table 3); keeping it here stops callers hand-rolling the key."""
+    Table 3, the quant sweep); keeping it here stops callers hand-rolling
+    the key. Precision is part of the key so mixed-precision spaces pair
+    each corner against its own baseline; widths are NORMALIZED first
+    (None -> the INT8 spec default, psum None -> derived) so a
+    default-precision point and an explicit ``Bind(weight_bits=8,
+    act_bits=8)`` corner — the same hardware — pair with each other."""
     pts = list(points)
-    sram = {(p.workload_name, p.arch): i for i, p in enumerate(pts)
-            if p.variant == "sram"}
+
+    def key(p):
+        return (p.workload_name, p.arch) + p.normalized_precision()
+
+    sram = {key(p): i for i, p in enumerate(pts) if p.variant == "sram"}
     mram = [i for i, p in enumerate(pts) if p.variant != "sram"]
-    return mram, [sram[(pts[i].workload_name, pts[i].arch)] for i in mram]
+    return mram, [sram[key(pts[i])] for i in mram]
 
 
 def memory_power_curve(report: EnergyReport, ips_grid) -> np.ndarray:

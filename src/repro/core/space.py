@@ -31,6 +31,8 @@ from dataclasses import dataclass, field, fields, replace
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
 
+from repro.configs.base import ConvLayerSpec
+
 # The paper's XR design is ONE piece of silicon serving the workload suite;
 # Tables 2-3 size buffers for the max over this suite.
 PAPER_SUITE = ("detnet", "edsnet")
@@ -44,6 +46,13 @@ class DesignPoint:
     or a frozen ``XRConfig``/``ModelConfig`` instance. ``extract_kw`` holds
     workload-extraction kwargs (e.g. ``context_len`` for LM decode specs) as
     a sorted item tuple so the point stays hashable.
+
+    ``weight_bits`` / ``act_bits`` / ``psum_bits`` override the extracted
+    layers' operand widths (``None`` keeps each layer's own default, INT8).
+    Precision is STRUCTURAL: it changes traffic, buffer sizing and area, so
+    it is part of ``workload_key()`` and flows through every Evaluator
+    cache. Sweep correlated corners with ``Bind(weight_bits=4, act_bits=8)``
+    axis values (see ``experiment.QUANT_CORNERS``).
     """
     workload: Any
     arch: str
@@ -53,6 +62,9 @@ class DesignPoint:
     pe_config: str = "v2"
     suite: Optional[Tuple[str, ...]] = PAPER_SUITE
     extract_kw: Tuple[Tuple[str, Any], ...] = ()
+    weight_bits: Optional[int] = None  # None -> spec default (INT8)
+    act_bits: Optional[int] = None
+    psum_bits: Optional[int] = None
 
     def __post_init__(self):
         if isinstance(self.suite, list):
@@ -71,9 +83,35 @@ class DesignPoint:
             return self.workload
         return getattr(self.workload, "name", "custom")
 
+    def precision(self) -> Tuple[Optional[int], Optional[int], Optional[int]]:
+        """Operand-width overrides as a hashable (weight, act, psum) tuple
+        (raw: ``None`` = keep each extracted spec's own width)."""
+        return (self.weight_bits, self.act_bits, self.psum_bits)
+
+    def normalized_precision(self) -> Tuple[int, int, int]:
+        """Physical corner identity with defaults resolved against
+        ``ConvLayerSpec``'s rules: ``None`` widths -> the INT8 field
+        defaults, psum ``None`` -> the derived ``psum_width``. The single
+        source of the defaulting rule for pairing (``nvm.sram_pairs``) and
+        labels — a default-width point and an explicit
+        ``Bind(weight_bits=8, act_bits=8)`` corner normalize identically."""
+        probe = ConvLayerSpec("_", "dense", 1, 1, 1, 1, (1, 1), **{
+            k: v for k, v in zip(("weight_bits", "act_bits", "psum_bits"),
+                                 self.precision()) if v is not None})
+        return (probe.weight_bits, probe.act_bits, probe.psum_width)
+
+    @property
+    def precision_label(self) -> str:
+        """Human label for tables: uniform widths collapse ('int8' for the
+        defaults AND the explicit 8/8 corner, 'int4'), mixed ones read
+        'w4a8'."""
+        w, a, _ = self.normalized_precision()
+        return f"int{w}" if w == a else f"w{w}a{a}"
+
     def workload_key(self) -> Tuple:
-        """Cache key for extraction: config identity + extraction kwargs."""
-        return (self.workload, self.extract_kw)
+        """Cache key for extraction: config identity + extraction kwargs +
+        operand widths (precision changes the extracted specs)."""
+        return (self.workload, self.extract_kw, self.precision())
 
     def asdict(self) -> Dict[str, Any]:
         return {f.name: getattr(self, f.name) for f in fields(self)}

@@ -232,14 +232,20 @@ def _conv(x, w, stride: int, groups: int = 1):
 def forward(cfg: XRConfig, params: Dict, state: Dict, images: jax.Array,
             *, train: bool = False,
             act_scales: Optional[Dict[str, float]] = None,
+            act_bits: int = 8,
             collect_acts: bool = False) -> Tuple[Dict, Dict]:
     """images: (B,H,W,Cin) fp32. Returns (outputs dict, new bn state).
 
-    ``act_scales``: per-layer symmetric INT8 scales -> fake-quantize each
-    conv/dense output (PTQ inference). ``collect_acts``: additionally return
-    every conv/dense output under outputs["acts"] (calibration pass).
+    ``act_scales``: per-layer symmetric scales -> fake-quantize each
+    conv/dense output (PTQ inference) saturating at the symmetric
+    ``act_bits`` range (scales must be calibrated at the same width).
+    ``collect_acts``: additionally return every conv/dense output under
+    outputs["acts"] (calibration pass).
     """
     x = images
+    if act_scales:
+        from repro.quant import ptq       # lazy: models stay importable solo
+        act_qmax = ptq.qmax(act_bits)
     tensors: Dict[str, jax.Array] = {}
     outputs: Dict[str, jax.Array] = {}
     new_state: Dict[str, Dict] = {}
@@ -250,7 +256,7 @@ def forward(cfg: XRConfig, params: Dict, state: Dict, images: jax.Array,
             collected[name] = y
         if act_scales and name in act_scales:
             s = act_scales[name]
-            y = jnp.clip(jnp.round(y / s), -127, 127) * s
+            y = jnp.clip(jnp.round(y / s), -act_qmax, act_qmax) * s
         return y
 
     for st in build_plan(cfg):

@@ -198,11 +198,16 @@ def lm_kv_dse(arch_names=("simba", "eyeriss"), node: int = 7,
                     r = evaluate(cfg, a, node, v, nvm=d,
                                  context_len=context_len)
                     xo = nvm_mod.crossover_ips(r, sram)
+                    # column schema tracks the labeled-metric bugfix in
+                    # experiment.lm_kv_rows (savings_at_10tok_s was silently
+                    # computed at min(10, max_ips)); VALUES stay frozen.
+                    savings_ips = min(10.0, r.max_ips)
                     rows.append(dict(
                         model=model, arch=a, variant=v, device=d,
                         energy_mj=r.total_pj / 1e9,
                         latency_ms=r.latency_s * 1e3,
                         crossover_tok_s=xo,
-                        savings_at_10tok_s=nvm_mod.savings_at_ips(
-                            r, sram, min(10.0, r.max_ips))))
+                        savings_ips=savings_ips,
+                        savings_at_ips=nvm_mod.savings_at_ips(
+                            r, sram, savings_ips)))
     return rows

@@ -75,6 +75,27 @@ def test_weight_histogram_discrete_after_quant():
     assert len(np.unique(qw)) <= 255 * w.size // w.size + 255
 
 
+def test_act_fake_quant_saturates_at_bit_width():
+    """Sub-8-bit activation quantization must saturate at qmax(bits), not
+    the hardcoded INT8 127: with percentile-calibrated 4-bit scales the
+    outliers above the calibration range clip differently at 4 vs 8 bits."""
+    cfg = get_smoke("detnet")
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+    img = jax.random.normal(jax.random.key(2),
+                            (1, *cfg.input_hw, cfg.in_channels))
+    scales = ptq.calibrate_acts(
+        lambda b: xr.forward(cfg, params, state, b,
+                             collect_acts=True)[0]["acts"],
+        [img], pct=90.0, bits=4)
+    q4, _ = xr.forward(cfg, params, state, img, act_scales=scales,
+                       act_bits=4)
+    q8, _ = xr.forward(cfg, params, state, img, act_scales=scales,
+                       act_bits=8)
+    assert any(float(jnp.max(jnp.abs(q4[k] - q8[k]))) > 0 for k in q4)
+
+
 def test_calibration_collects_all_mac_layers():
     cfg = get_smoke("edsnet")
     pdefs, sdefs = xr.param_defs(cfg)

@@ -16,6 +16,11 @@ for every cell; the PR-1 Evaluator cached the structure but still built
 ``benchmarks/bench_gridsearch.py`` records the speedups of both steps.
 
     PYTHONPATH=src python tools/gridsearch.py [--limit N] [--top K]
+        [--weight-bits 4] [--act-bits 8]
+
+``--weight-bits/--act-bits`` re-bind the scoring space to a precision
+corner (the targets stay the paper's INT8 numbers — useful as a probe for
+how far quantization moves the savings bands, not as a fit).
 """
 import argparse
 import itertools
@@ -45,30 +50,53 @@ GRID = dict(
     vg_write=[0.55, 0.80],
 )
 
-SPACE = table3_space(node=7)
-
-# Row indices of SPACE for the vectorized score: per (workload, arch) pair
-# the (sram, p0, p1) rows, plus flat (nvm, sram, ips) arrays for the batched
-# savings call. Pure structure — computed once at import.
-_ROW = {(p.workload_name, p.arch, p.variant): i
-        for i, p in enumerate(SPACE)}
-_PAIRS = [(w, a, _ROW[(w, a, "sram")], _ROW[(w, a, "p0")],
-           _ROW[(w, a, "p1")]) for (w, a) in T3]
-_NVM_ROWS = np.array([r for (_, _, _, p0, p1) in _PAIRS for r in (p0, p1)])
-_SRAM_ROWS = np.array([s for (_, _, s, _, _) in _PAIRS for _ in (0, 1)])
-_IPS = np.array([IPS_MIN[w] for (w, _, _, _, _) in _PAIRS for _ in (0, 1)])
+def build_space(weight_bits=None, act_bits=None):
+    """The Table-3 scoring space, optionally at a precision corner
+    (``--weight-bits/--act-bits``): same structure, every point re-bound to
+    the given operand widths (None keeps the paper's INT8)."""
+    space = table3_space(node=7)
+    if weight_bits is not None or act_bits is not None:
+        space = space.map(lambda p: p.with_(weight_bits=weight_bits,
+                                            act_bits=act_bits))
+    return space
 
 
-def score(ev: Evaluator):
+def build_indices(space):
+    """Row indices for the vectorized score: per (workload, arch) pair the
+    (sram, p0, p1) rows, plus flat (nvm, sram, ips) arrays for the batched
+    savings call. Pure structure — computed once per space."""
+    row = {(p.workload_name, p.arch, p.variant): i
+           for i, p in enumerate(space)}
+    pairs = [(w, a, row[(w, a, "sram")], row[(w, a, "p0")],
+              row[(w, a, "p1")]) for (w, a) in T3]
+    nvm_rows = np.array([r for (_, _, _, p0, p1) in pairs for r in (p0, p1)])
+    sram_rows = np.array([s for (_, _, s, _, _) in pairs for _ in (0, 1)])
+    ips = np.array([IPS_MIN[w] for (w, _, _, _, _) in pairs for _ in (0, 1)])
+    return pairs, nvm_rows, sram_rows, ips
+
+
+SPACE = build_space()
+_PAIRS, _NVM_ROWS, _SRAM_ROWS, _IPS = build_indices(SPACE)
+
+
+def score(ev: Evaluator, space=None, indices=None):
     """Squared error of the Table-3 savings grid vs the paper targets.
 
     Columnar: one vectorized ``EnergyTable`` for the whole space, one
-    batched savings evaluation for all 8 (variant, baseline) pairs."""
-    table = ev.evaluate_table(SPACE)
-    s = nvm_mod.savings_at_ips_batch(table, _NVM_ROWS, _SRAM_ROWS, _IPS)
+    batched savings evaluation for all 8 (variant, baseline) pairs.
+    ``space``/``indices`` select a precision corner (default: INT8; the
+    paper targets are INT8 numbers — at other corners the error column is
+    a how-far-does-quantization-move-the-bands probe, not a fit)."""
+    if space is None:
+        space, indices = SPACE, (_PAIRS, _NVM_ROWS, _SRAM_ROWS, _IPS)
+    elif indices is None:
+        indices = build_indices(space)
+    pairs, nvm_rows, sram_rows, ips = indices
+    table = ev.evaluate_table(space)
+    s = nvm_mod.savings_at_ips_batch(table, nvm_rows, sram_rows, ips)
     err = 0.0
     out = {}
-    for k, (w, a, *_rows) in enumerate(_PAIRS):
+    for k, (w, a, *_rows) in enumerate(pairs):
         s0, s1 = float(s[2 * k]), float(s[2 * k + 1])
         out[(w, a)] = (s0, s1)
         t0, t1 = T3[(w, a)]
@@ -105,10 +133,12 @@ def apply_knobs(leak, cfm, cfs, vr, vw):
                                          1, 2, True)
 
 
-def run(limit=None, top=8, quiet=False):
+def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None):
     # Structural caches survive device-table mutation (they are geometry
     # only); report caching must stay OFF under mutation.
     ev = Evaluator(cache_reports=False)
+    space = build_space(weight_bits, act_bits)
+    indices = build_indices(space)
     saved = (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
              dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"])
     results = []
@@ -119,7 +149,7 @@ def run(limit=None, top=8, quiet=False):
         for knobs in combos:
             apply_knobs(*knobs)
             try:
-                err, out = score(ev)
+                err, out = score(ev, space, indices)
             except Exception:
                 continue
             results.append((err, knobs, out))
@@ -144,8 +174,14 @@ def main():
     p.add_argument("--limit", type=int, default=None,
                    help="evaluate only the first N grid cells")
     p.add_argument("--top", type=int, default=8)
+    p.add_argument("--weight-bits", type=int, default=None,
+                   help="score the grid at this stored weight width "
+                        "(default: the paper's INT8)")
+    p.add_argument("--act-bits", type=int, default=None,
+                   help="score the grid at this stored activation width")
     a = p.parse_args()
-    run(limit=a.limit, top=a.top)
+    run(limit=a.limit, top=a.top, weight_bits=a.weight_bits,
+        act_bits=a.act_bits)
 
 
 if __name__ == "__main__":

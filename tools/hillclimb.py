@@ -70,6 +70,11 @@ DSE_AXES = dict(
     variant=("sram", "p0", "p1"),
     nvm=(None, "stt", "sot", "vgsot"),
     pe_config=("v1", "v2"),
+    # precision dimension: stored operand widths (None = the specs' INT8
+    # default, so an explicit 8 would only duplicate it); sizing, traffic
+    # and area all respond (DESIGN.md §5)
+    weight_bits=(None, 4),
+    act_bits=(None, 4),
 )
 
 
@@ -121,13 +126,14 @@ def dse_main(a):
         step += 1
         p = best[0]
         print(f"  step {step}: {p.arch}/{p.node}nm/{p.variant}"
-              f"/{p.nvm or 'auto'}/{p.pe_config}  {fmt(best[1])}")
+              f"/{p.nvm or 'auto'}/{p.pe_config}/{p.precision_label}"
+              f"  {fmt(best[1])}")
     p, val, (table, i) = best
     hits, misses = ev.cache_info()["traffic"]
     print(f"\nlocal optimum after {step} steps "
           f"({time.monotonic()-t0:.1f}s, traffic cache {hits}h/{misses}m):")
     print(f"  {p.arch} @ {p.node}nm, {p.variant}/{p.nvm or 'auto'}, "
-          f"pe={p.pe_config}: {fmt(val)}  "
+          f"pe={p.pe_config}, {p.precision_label}: {fmt(val)}  "
           f"lat={float(table.latency_s[i])*1e3:.2f}ms  "
           f"E={float(table.total_pj[i])/1e6:.2f}uJ")
 
