@@ -21,6 +21,13 @@ int8 columnar cell: per-layer operand widths live in the traffic columns,
 so the two cells must cost the same — ``--check`` gates the ratio to catch
 per-element-width work leaking into the pricing hot path.
 
+A placement-enumeration cell (the FULL Simba 4-tech level lattice at 7nm,
+256 hierarchies, one workload — ``experiment.placement_space``) is timed
+the same way: per-level technology vectors are just rows of the plan's
+``tech_idx``, so a placement must not cost more per point than an int8
+variant point — ``--check`` gates the per-placement / per-int8-point cost
+ratio to catch per-placement Python work leaking into the pricing pass.
+
     PYTHONPATH=src python benchmarks/bench_gridsearch.py [--cells 12]
         [--check benchmarks/baseline_gridsearch.json]
         [--write-baseline benchmarks/baseline_gridsearch.json]
@@ -52,7 +59,7 @@ import legacy_reference as legacy
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core.energy import EnergyReport, LevelEnergy
-from repro.core.experiment import IPS_MIN, Evaluator
+from repro.core.experiment import IPS_MIN, Evaluator, placement_space
 from tools import gridsearch
 
 
@@ -192,6 +199,13 @@ def seed_score():
     return err, out
 
 
+def placement_cell(ev: Evaluator, space):
+    """One placement-lattice cell: price the whole enumeration in a single
+    columnar pass and reduce to the best memory power at 10 IPS (the same
+    shape of reduction the placement sweep performs per grid cell)."""
+    return float(ev.evaluate_table(space).memory_power_at(10.0).min())
+
+
 def run_cells(n_cells, score_fn):
     """Score the first n_cells of the tuning grid, return (seconds, errs)."""
     errs = []
@@ -210,17 +224,22 @@ def measure(cells, repeats=3):
     ev_row = Evaluator(cache_reports=False)
     ev_pr1 = Evaluator(cache_reports=False)
     ev_w4a8 = Evaluator(cache_reports=False)
+    ev_plc = Evaluator(cache_reports=False)
     # mixed-precision (w4a8) corner of the same scoring space: times the
     # columnar hot path with per-layer operand-width columns in play —
     # guards against per-element-width regressions in pricing
     space_w4a8 = gridsearch.build_space(weight_bits=4, act_bits=8)
     idx_w4a8 = gridsearch.build_indices(space_w4a8)
+    # full Simba placement lattice at one node (4 techs ^ 4 levels = 256
+    # hierarchies): one vectorized pricing per cell, re-priced per knob combo
+    space_plc = placement_space(workloads=("detnet",), arch="simba", node=7)
     # warm the structural/plan caches outside the timed region (the full
     # 216-cell search amortizes this in the first cell)
     gridsearch.score(ev_col)
     gridsearch.score_reports(ev_row)
     pr1_score(ev_pr1)
     gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8)
+    placement_cell(ev_plc, space_plc)
 
     def best_of(score_fn):
         """Min wall time over ``repeats`` passes (noise suppression)."""
@@ -236,12 +255,14 @@ def measure(cells, repeats=3):
     t_seed, errs_seed = best_of(seed_score)
     t_w4a8, _ = best_of(
         lambda: gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8))
+    t_plc, _ = best_of(lambda: (placement_cell(ev_plc, space_plc), {}))
 
     for ec, ev_, e1, es in zip(errs_col, errs_row, errs_pr1, errs_seed):
         assert math.isclose(ec, es, rel_tol=1e-9), (ec, es)
         assert math.isclose(ev_, es, rel_tol=1e-9), (ev_, es)
         assert math.isclose(e1, es, rel_tol=1e-9), (e1, es)
 
+    n_int8 = len(gridsearch.SPACE)
     return dict(
         cells=cells,
         seed_ms_per_cell=t_seed / cells * 1e3,
@@ -249,11 +270,18 @@ def measure(cells, repeats=3):
         rowview_ms_per_cell=t_row / cells * 1e3,
         columnar_ms_per_cell=t_col / cells * 1e3,
         w4a8_ms_per_cell=t_w4a8 / cells * 1e3,
+        placement_ms_per_cell=t_plc / cells * 1e3,
+        placement_points=len(space_plc),
         speedup_pr1_vs_seed=t_seed / t_pr1,
         speedup_columnar_vs_seed=t_seed / t_col,
         speedup_columnar_vs_pr1=t_pr1 / t_col,
         speedup_columnar_vs_rowview=t_row / t_col,
         ratio_w4a8_vs_int8=t_w4a8 / t_col,
+        # per-PLACEMENT cost vs per-POINT cost of the int8 variant cell:
+        # both are single vectorized pricings, so this should sit near (or
+        # below — bigger batch amortizes better) 1.0
+        ratio_placement_point_vs_int8=(t_plc / len(space_plc))
+                                      / (t_col / n_int8),
     )
 
 
@@ -282,6 +310,10 @@ def main():
           f" ms/cell  {m['speedup_columnar_vs_seed']:6.1f}x")
     print(f"columnar w4a8 corner:       {m['w4a8_ms_per_cell']:8.2f}"
           f" ms/cell  ({m['ratio_w4a8_vs_int8']:.2f}x int8 cell)")
+    print(f"placement lattice "
+          f"({m['placement_points']:3d} pts): {m['placement_ms_per_cell']:8.2f}"
+          f" ms/cell  ({m['ratio_placement_point_vs_int8']:.2f}x int8"
+          f" per-point cost)")
     print(f"columnar vs PR-1 Evaluator: {m['speedup_columnar_vs_pr1']:.1f}x")
 
     if a.write_baseline:
@@ -312,6 +344,19 @@ def main():
                   f"(baseline {base_q:.2f}, ceiling {ceil_q:.2f})")
             if got_q > ceil_q:
                 print("FAIL: >2x regression of the mixed-precision cell")
+                failed = True
+        # placement guard: a lattice point prices through the same columnar
+        # pass as a variant point, so the per-placement cost must not drift
+        # away from the per-point cost of the int8 cell (catches per-
+        # placement Python work leaking into the pricing hot path)
+        base_p = base.get("ratio_placement_point_vs_int8")
+        if base_p is not None:
+            ceil_p = max(base_p, 1.0) * 2.0
+            got_p = m["ratio_placement_point_vs_int8"]
+            print(f"check: per-placement vs int8-point cost ratio "
+                  f"{got_p:.2f} (baseline {base_p:.2f}, ceiling {ceil_p:.2f})")
+            if got_p > ceil_p:
+                print("FAIL: >2x regression of the placement-lattice cell")
                 failed = True
         if failed:
             sys.exit(1)

@@ -148,6 +148,17 @@ def quant_axis() -> Tuple[List[Dict], str]:
                   f"int8 {fmt(xo['int8'])} -> int4 {fmt(xo['int4'])} IPS")
 
 
+def placement_lattice() -> Tuple[List[Dict], str]:
+    """Beyond-paper: full per-level technology lattice vs the P0/P1
+    corners (256 Simba hierarchies per workload, one columnar pass)."""
+    rows = xp.SWEEPS["placement"].rows()
+    det = [r for r in rows if r["workload"] == "detnet"]
+    best = min(det, key=lambda r: r["p_mem_w"])
+    n_dom = sum(r["beats_p0"] and r["beats_p1"] for r in det)
+    return rows, (f"detnet@{best['ips']:g}ips: {n_dom} hybrids beat P0+P1; "
+                  f"best {best['placement']} {best['savings']:+.0%}")
+
+
 ALL = [fig1_quant, fig2e_energy_breakdown, fig2f_edp, fig3d_nvm_energy,
        fig4_breakdown, fig5_power_ips, table2_area, table3_ips, lm_kv_dse,
-       quant_axis]
+       quant_axis, placement_lattice]

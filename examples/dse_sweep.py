@@ -96,6 +96,26 @@ for r in SWEEPS["quant"].rows(ev):
     print(f"  {r['workload']:10s} {r['precision']:6s} {r['variant']:7s} "
           f"{r['energy_uj']:8.1f} {r['total_mm2']:9.2f} {xo:>10s}")
 
+# --- Placement lattice: hybrid hierarchies vs the paper's P0/P1 corners ----
+# The paper evaluates 2 placements; SWEEPS["placement"] prices the FULL
+# per-level lattice (4 techs ^ 4 Simba levels = 256 hierarchies) in one
+# columnar pass and reports each vs the P0/P1 corners (DESIGN.md §6
+# §Placement).
+print("\n=== Placement lattice (simba @7nm): best hybrids vs P0/P1 ===")
+prows = SWEEPS["placement"].rows(ev)
+for w in ("detnet", "edsnet"):
+    grp = sorted((r for r in prows if r["workload"] == w),
+                 key=lambda r: r["p_mem_w"])
+    c = grp[0]
+    print(f"  {w} @ {c['ips']:g} IPS: P0 {c['p0_p_mem_w']*1e6:.0f} uW, "
+          f"P1 {c['p1_p_mem_w']*1e6:.0f} uW; "
+          f"{sum(r['beats_p0'] and r['beats_p1'] for r in grp)} hybrids "
+          f"beat both")
+    for r in grp[:3]:
+        print(f"    {r['placement']:<48s} {r['p_mem_w']*1e6:7.1f} uW "
+              f"({r['savings']:+.0%} vs sram)  area {r['total_mm2']:.2f}mm2"
+              f"{'  *pareto' if r['pareto'] else ''}")
+
 # Frontier helpers: which (arch, variant, device) corners are Pareto-optimal
 # in (EDP, P_mem@IPS_min) for DetNet at 7nm?
 space = (SWEEPS["fig3d"].space()

@@ -22,7 +22,9 @@ access, a 256kB bank is not); capacity/area/leakage use macro x count.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
@@ -36,6 +38,15 @@ class MemLevel:
     count: int         # number of banks / per-PE instances
     bus_bits: int      # total access width at this level
     tech: str = "sram"
+
+    def __post_init__(self):
+        # Validate at construction so a typo'd device name fails HERE with
+        # the level named, not as a bare KeyError deep inside pricing.
+        from repro.core import devices as dev
+        if self.tech not in dev.DEVICES:
+            raise ValueError(
+                f"memory level {self.name!r}: unknown technology "
+                f"{self.tech!r} (known devices: {sorted(dev.DEVICES)})")
 
     @property
     def capacity_kb(self) -> float:
@@ -61,6 +72,12 @@ class ArchSpec:
         return self.pe_x * self.pe_y
 
     def with_tech(self, mapping: Dict[str, str]) -> "ArchSpec":
+        unknown = set(mapping) - {l.name for l in self.levels}
+        if unknown:
+            raise KeyError(
+                f"with_tech: {sorted(unknown)} are not levels of "
+                f"{self.name!r} (levels: {[l.name for l in self.levels]})")
+        # per-level tech validation happens in MemLevel.__post_init__
         new = tuple(dataclasses.replace(l, tech=mapping.get(l.name, l.tech))
                     for l in self.levels)
         return dataclasses.replace(self, levels=new)
@@ -126,10 +143,27 @@ def simba_spec(pe_config: str = "v2", weight_kb: float = 4096,
 
 ARCHS = {"cpu": cpu_spec, "eyeriss": eyeriss_spec, "simba": simba_spec}
 
+_ARCH_PARAMS = {n: frozenset(inspect.signature(fn).parameters)
+                for n, fn in ARCHS.items()}
+
 
 def get_arch(name: str, **kw) -> ArchSpec:
-    if name == "cpu":
-        kw.pop("pe_config", None)
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r} (one of {sorted(ARCHS)})")
+    unknown = set(kw) - _ARCH_PARAMS[name]
+    if unknown == {"pe_config"} and name == "cpu":
+        # Historic asymmetry: sweeps carry pe_config for every point, but the
+        # CPU model has no PE array config. Warn-and-ignore keeps those
+        # sweeps working; anything else unknown is a hard error so a sweep
+        # definition can't silently diverge from intent.
+        warnings.warn(
+            "get_arch('cpu'): ignoring pe_config (the CPU model has no PE "
+            "array configuration)", stacklevel=2)
+        kw.pop("pe_config")
+    elif unknown:
+        raise TypeError(
+            f"get_arch({name!r}): unknown kwargs {sorted(unknown)} "
+            f"(accepted: {sorted(_ARCH_PARAMS[name])})")
     return ARCHS[name](**kw)
 
 
@@ -139,13 +173,11 @@ VARIANTS = ("sram", "p0", "p1")
 
 
 def apply_variant(spec: ArchSpec, variant: str, nvm: str) -> ArchSpec:
-    """variant: 'sram' | 'p0' (weight levels -> NVM) | 'p1' (all -> NVM)."""
-    if variant == "sram":
-        return spec
-    if variant == "p0":
-        mapping = {l.name: nvm for l in spec.levels if l.cls == "weight"}
-    elif variant == "p1":
-        mapping = {l.name: nvm for l in spec.levels}
-    else:
-        raise ValueError(variant)
-    return spec.with_tech(mapping)
+    """variant: 'sram' | 'p0' (weight levels -> NVM) | 'p1' (all -> NVM).
+
+    Thin legacy wrapper over the first-class technology axis: the same
+    mapping now comes from ``placement.Placement.variant`` (byte-parity
+    asserted by ``tests/test_placement.py`` against the frozen seed rows).
+    """
+    from repro.core.placement import Placement
+    return Placement.variant(variant, nvm).apply(spec)

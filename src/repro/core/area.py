@@ -53,7 +53,8 @@ def savings(nvm: AreaReport, sram: AreaReport) -> float:
 def area_space(traffic_groups, gidx, points, nvms):
     """Vectorized ``area`` over a whole design space in one numpy pass.
 
-    Same inputs as ``energy.price_space``; returns a ``columns.AreaTable``
+    Same inputs as ``energy.price_space`` (per-level technologies resolved
+    from each point's ``placement``); returns a ``columns.AreaTable``
     whose ``row(i)`` is the ``AreaReport`` view. The scalar ``area`` above
     stays the single-point reference implementation."""
     from repro.core import columns

@@ -47,8 +47,7 @@ from repro.core import devices as dev
 from repro.core.archspec import ArchSpec
 from repro.core.dataflow import LayerAccess, LevelTraffic
 from repro.core.energy import EnergyReport, LevelEnergy
-
-_VARIANT_CODE = {"sram": 0, "p0": 1, "p1": 2}
+from repro.core.placement import Placement
 
 
 # ---------------------------------------------------------------------------
@@ -283,10 +282,12 @@ def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
                points: Sequence[Any], nvms: Sequence[str]) -> PricingPlan:
     """Flatten mapped traffic groups + point coordinates into one plan.
 
-    ``points`` need ``workload_name`` / ``arch`` / ``variant`` / ``node``
-    attributes (``DesignPoint`` satisfies this); ``nvms`` is the resolved
-    NVM device per point (the variant tech-mapping of ``apply_variant`` is
-    replicated here as array selects).
+    ``points`` need ``workload_name`` / ``node`` attributes plus a
+    ``placement`` (or legacy ``variant``/``nvm`` pair — ``DesignPoint``
+    satisfies both); ``nvms`` is the resolved NVM device per point, the
+    default that deferred placement entries bind to. Each point's per-level
+    technology VECTOR (``Placement.techs_for``) is what the pricing pass
+    batches on — a hybrid hierarchy is just another row of ``tech_idx``.
     """
     groups = tuple(groups)
     gidx = np.asarray(gidx, int)
@@ -326,12 +327,14 @@ def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
     clock_idx = np.array([ckey_pos[k] for k in clock_per_pt], int)
 
     weight_cls = (g_cls == "weight")[gidx]
-    base_tech = g_tech[gidx]
-    var = np.array([_VARIANT_CODE[p.variant] for p in points], int)
-    nvm_col = np.array(list(nvms), object)[:, None]
-    to_nvm = (var == 2)[:, None] | ((var == 1)[:, None] & weight_cls)
-    tech_names = np.where(to_nvm, np.broadcast_to(nvm_col, base_tech.shape),
-                          base_tech)
+    tech_names = g_tech[gidx].copy()
+    for i, (p, g) in enumerate(zip(points, gidx)):
+        pl = getattr(p, "placement", None)
+        if pl is None:
+            pl = Placement.variant(p.variant, getattr(p, "nvm", None))
+        levels = groups[g].arch.levels
+        tech_names[i, :len(levels)] = pl.techs_for(levels,
+                                                   default_nvm=nvms[i])
     tech_list, tech_idx = np.unique(tech_names.astype(str),
                                     return_inverse=True)
     tech_idx = tech_idx.reshape(tech_names.shape)

@@ -115,3 +115,12 @@ def sweep_quant(workloads=PAPER_SUITE, node: int = 7,
     return xp.SWEEPS["quant"].rows(workloads=workloads, node=node,
                                    context_len=context_len,
                                    lm_archs=lm_archs)
+
+
+def sweep_placement(workloads=PAPER_SUITE, arch: str = "simba",
+                    node: int = 7, **kw) -> List[Dict]:
+    """Per-level technology lattice: every hybrid hierarchy of the arch
+    priced in one columnar pass, vs the paper's P0/P1 corners
+    (DESIGN.md §6 §Placement)."""
+    return xp.SWEEPS["placement"].rows(workloads=workloads, arch=arch,
+                                       node=node, **kw)

@@ -151,10 +151,13 @@ def price_space(traffic_groups, gidx, points, nvms):
 
     ``traffic_groups`` are ``columns.TrafficTable``s (one per mapped
     (workload, sized-arch) pair), ``gidx`` maps each point to its group,
-    ``nvms`` is the resolved device per point. Returns an
-    ``columns.EnergyTable`` whose ``row(i)`` is the ``EnergyReport`` view.
-    The scalar ``price`` above stays the single-point reference the parity
-    suite checks the columnar path against."""
+    ``nvms`` is the resolved default device per point (what each point's
+    ``placement`` binds deferred entries to — see ``core.placement``; the
+    per-level technology vectors the pass batches on come from
+    ``Placement.techs_for``). Returns a ``columns.EnergyTable`` whose
+    ``row(i)`` is the ``EnergyReport`` view. The scalar ``price`` above
+    stays the single-point reference the parity suite checks the columnar
+    path against."""
     from repro.core import columns
     return columns.price(columns.build_plan(traffic_groups, gidx, points,
                                             nvms))

@@ -43,10 +43,11 @@ from repro.core import columns
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core import workload as wl
-from repro.core.archspec import ArchSpec, apply_variant, get_arch
+from repro.core.archspec import ArchSpec, get_arch
 from repro.core.dataflow import (map_workload, map_workload_columns,
                                  required_act_kb, required_weight_kb)
 from repro.core.energy import EnergyReport, price
+from repro.core.placement import Placement
 from repro.core.space import Bind, DesignPoint, DesignSpace, PAPER_SUITE
 
 # paper §5: application minimum inference rates
@@ -282,7 +283,7 @@ class Evaluator:
         base = self.base_arch(point)
         accesses = self.accesses(point, base)
         nvm = self._resolve_nvm(point)
-        arch = apply_variant(base, point.variant, nvm)
+        arch = point.placement.apply(base, default_nvm=nvm)
         rep = price(accesses, arch, point.node, point.workload_name,
                     point.variant, nvm)
         if self._cache_reports:
@@ -296,7 +297,7 @@ class Evaluator:
         self._tick("area", False)
         base = self.base_arch(point)
         nvm = self._resolve_nvm(point, default="vgsot")
-        arch = apply_variant(base, point.variant, nvm)
+        arch = point.placement.apply(base, default_nvm=nvm)
         rep = area_mod.area(arch, point.node, point.variant)
         if self._cache_reports:
             self._areas[point] = rep
@@ -773,6 +774,108 @@ def quant_rows(ev: Evaluator, workloads=PAPER_SUITE, node: int = 7,
     return rows
 
 
+# --- beyond-paper: per-level placement lattice (hybrid hierarchies) ---------
+
+# The lattice's technology menu: the paper's three MRAM devices plus SRAM.
+# 4 techs over Simba's 4 levels = 256 hierarchies per (workload, node).
+PLACEMENT_TECHS = ("sram", "stt", "sot", "vgsot")
+
+
+def placement_space(workloads=PAPER_SUITE, arch: str = "simba",
+                    node: int = 7, techs=PLACEMENT_TECHS,
+                    levels=None) -> DesignSpace:
+    """The full per-level technology lattice for one architecture: every
+    assignment of ``techs`` to ``levels`` (default: the whole hierarchy),
+    as ONE declarative space — the paper's 2-point {P0, P1} axis
+    generalized to ``len(techs) ** len(levels)`` hierarchies."""
+    placements = tuple(Placement.enumerate(arch, tuple(techs), levels=levels))
+    return DesignSpace.product(
+        "placement", workload=workloads, arch=arch, node=node,
+        placement=placements)
+
+
+def placement_rows(ev: Evaluator, workloads=PAPER_SUITE, arch: str = "simba",
+                   node: int = 7, techs=PLACEMENT_TECHS, levels=None,
+                   ips: Optional[float] = None) -> List[Dict]:
+    """Price the WHOLE placement lattice in one columnar pass and report,
+    per (workload, placement): memory power at the paper's IPS target,
+    savings vs the all-SRAM baseline, the same-placement cross-over IPS
+    (batched bisection vs that baseline), area, and whether the hierarchy
+    beats the paper's P0/P1 corners and sits on the (P_mem, area) Pareto
+    frontier of its workload group.
+
+    The corners (all-SRAM, P0, P1 at the node's paper device) are APPENDED
+    to the priced point list rather than located inside the lattice, so
+    any sub-lattice works too (``levels=('gwb',)``, ``techs`` without
+    'sram', ...) — the comparison baseline never depends on lattice
+    membership."""
+    space = placement_space(workloads, arch, node, techs, levels)
+    pts = list(space)
+    # paper corners per (workload, node), priced in the SAME pass
+    corners: Dict[Tuple, Dict[str, int]] = {}
+    corner_pts: List[DesignPoint] = []
+    for p in pts:
+        key = (p.workload_name, p.node)
+        if key in corners:
+            continue
+        nvm = dev.PAPER_NVM_AT_NODE.get(p.node, "stt")
+        corners[key] = {}
+        for v in ("sram", "p0", "p1"):
+            corners[key][v] = len(pts) + len(corner_pts)
+            corner_pts.append(p.with_(placement=Placement.variant(v, nvm)))
+    all_pts = pts + corner_pts
+    table = ev.evaluate_table(all_pts)        # ONE vectorized pricing pass
+    areas = ev.area_table(space)
+    plan = table.plan
+    techs_by_row = [tuple(str(plan.tech_names[i, j])
+                          for j in range(plan.mask.shape[1])
+                          if plan.mask[i, j]) for i in range(len(pts))]
+    level_names = [str(n) for n, m in zip(plan.level_names[0], plan.mask[0])
+                   if m]
+
+    ips_pp = np.array([ips if ips is not None
+                       else IPS_MIN.get(p.workload_name, 10.0)
+                       for p in all_pts])
+    pmem = table.memory_power_at(ips_pp)
+
+    base_rows = np.array([corners[(p.workload_name, p.node)]["sram"]
+                          for p in pts], int)
+    hybrid = [i for i, p in enumerate(pts)
+              if not p.placement.converts_nothing]
+    xo = nvm_mod.crossover_ips_batch(table, hybrid, base_rows[hybrid])
+    xo_at = {i: xo[k] for k, i in enumerate(hybrid)}
+
+    # Pareto on (P_mem@target, total area) within each (workload, node) group
+    pareto = np.zeros(len(pts), bool)
+    for key in corners:
+        idx = np.array([i for i, p in enumerate(pts)
+                        if (p.workload_name, p.node) == key], int)
+        v = np.stack([pmem[idx], areas.total_mm2[idx]], axis=1)
+        le = (v[:, None, :] <= v[None, :, :]).all(axis=2)
+        lt = (v[:, None, :] < v[None, :, :]).any(axis=2)
+        pareto[idx] = ~(le & lt).any(axis=0)
+
+    rows = []
+    for i, p in enumerate(pts):
+        c = corners[(p.workload_name, p.node)]
+        x = xo_at.get(i)
+        rows.append(dict(
+            workload=p.workload_name, arch=p.arch, node=p.node,
+            placement=p.variant,
+            techs=dict(zip(level_names, techs_by_row[i])),
+            ips=float(ips_pp[i]),
+            p_mem_w=float(pmem[i]),
+            savings=float(1.0 - pmem[i] / pmem[base_rows[i]]),
+            crossover_ips=(None if x is None or math.isnan(x) else float(x)),
+            total_mm2=float(areas.total_mm2[i]),
+            p0_p_mem_w=float(pmem[c["p0"]]),
+            p1_p_mem_w=float(pmem[c["p1"]]),
+            beats_p0=bool(pmem[i] < pmem[c["p0"]]),
+            beats_p1=bool(pmem[i] < pmem[c["p1"]]),
+            pareto=bool(pareto[i])))
+    return rows
+
+
 SWEEPS: Dict[str, Sweep] = {
     "fig2f": Sweep("fig2f", "Fig 2(f): EDP vs node, SRAM-only platforms",
                    fig2f_space, fig2f_rows),
@@ -791,4 +894,7 @@ SWEEPS: Dict[str, Sweep] = {
     "quant": Sweep("quant", "Beyond-paper: precision axis (INT8/W4A8/INT4) "
                    "energy/latency/area + MRAM cross-over",
                    quant_space, quant_rows),
+    "placement": Sweep("placement", "Beyond-paper: per-level technology "
+                       "lattice — hybrid hierarchies vs the P0/P1 corners",
+                       placement_space, placement_rows),
 }

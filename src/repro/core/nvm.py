@@ -91,13 +91,16 @@ def crossover_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
 
 
 def sram_pairs(points):
-    """Pair every non-SRAM point with its SRAM baseline at the same
-    (workload, arch, operand widths).
+    """Pair every NVM-converting point with its SRAM baseline at the same
+    (workload, arch, node, operand widths).
 
     Returns ``(mram_rows, sram_rows)`` index lists into ``points`` — the
     row pairing every batched savings/cross-over call needs (Fig 5,
     Table 3, the quant sweep); keeping it here stops callers hand-rolling
-    the key. Precision is part of the key so mixed-precision spaces pair
+    the key. A point is a baseline iff its PLACEMENT converts no level
+    (``Placement.converts_nothing``) — the legacy ``variant == "sram"``
+    test generalized so an explicit all-``sram`` lattice point counts too.
+    Precision is part of the key so mixed-precision spaces pair
     each corner against its own baseline; widths are NORMALIZED first
     (None -> the INT8 spec default, psum None -> derived) so a
     default-precision point and an explicit ``Bind(weight_bits=8,
@@ -105,10 +108,12 @@ def sram_pairs(points):
     pts = list(points)
 
     def key(p):
-        return (p.workload_name, p.arch) + p.normalized_precision()
+        return (p.workload_name, p.arch, p.node) + p.normalized_precision()
 
-    sram = {key(p): i for i, p in enumerate(pts) if p.variant == "sram"}
-    mram = [i for i, p in enumerate(pts) if p.variant != "sram"]
+    sram = {key(p): i for i, p in enumerate(pts)
+            if p.placement.converts_nothing}
+    mram = [i for i, p in enumerate(pts)
+            if not p.placement.converts_nothing]
     return mram, [sram[key(pts[i])] for i in mram]
 
 

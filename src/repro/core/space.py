@@ -32,10 +32,22 @@ from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
 
 from repro.configs.base import ConvLayerSpec
+from repro.core.placement import Placement
 
 # The paper's XR design is ONE piece of silicon serving the workload suite;
 # Tables 2-3 size buffers for the max over this suite.
 PAPER_SUITE = ("detnet", "edsnet")
+
+
+class _Unset:
+    """Sentinel distinguishing "kwarg not given" from an explicit ``None``
+    (``nvm=None`` is a real value: defer to the node's paper device)."""
+
+    def __repr__(self):
+        return "<unset>"
+
+
+_UNSET = _Unset()
 
 
 @dataclass(frozen=True)
@@ -47,6 +59,19 @@ class DesignPoint:
     workload-extraction kwargs (e.g. ``context_len`` for LM decode specs) as
     a sorted item tuple so the point stays hashable.
 
+    The technology axis is the frozen ``placement`` (see
+    ``core.placement``): an ordered per-level device assignment. The legacy
+    ``variant``/``nvm`` pair is accepted and CANONICALIZED into it —
+    ``DesignPoint(w, a, n, "p0", nvm="stt")`` and
+    ``DesignPoint(w, a, n, placement=Placement.variant("p0", "stt"))`` are
+    the same (equal, same hash) point. After construction ``variant`` always
+    holds the placement's label (``"sram"/"p0"/"p1"`` for the paper corners,
+    an explicit ``gwb=stt+...`` label for hybrids) and ``nvm`` the
+    placement's bound device, so every existing row builder keeps emitting
+    byte-identical rows. Change the trio through ``with_()`` (it keeps the
+    three fields coherent; raw ``dataclasses.replace`` with a new
+    ``placement`` would see the stale label).
+
     ``weight_bits`` / ``act_bits`` / ``psum_bits`` override the extracted
     layers' operand widths (``None`` keeps each layer's own default, INT8).
     Precision is STRUCTURAL: it changes traffic, buffer sizing and area, so
@@ -57,14 +82,15 @@ class DesignPoint:
     workload: Any
     arch: str
     node: int
-    variant: str = "sram"
-    nvm: Optional[str] = None          # None -> paper's device at this node
+    variant: Any = None                # label str | Placement | None
+    nvm: Any = _UNSET                  # device str | None (paper's @node)
     pe_config: str = "v2"
     suite: Optional[Tuple[str, ...]] = PAPER_SUITE
     extract_kw: Tuple[Tuple[str, Any], ...] = ()
     weight_bits: Optional[int] = None  # None -> spec default (INT8)
     act_bits: Optional[int] = None
     psum_bits: Optional[int] = None
+    placement: Optional[Placement] = None
 
     def __post_init__(self):
         if isinstance(self.suite, list):
@@ -72,9 +98,34 @@ class DesignPoint:
         if isinstance(self.extract_kw, dict):
             object.__setattr__(self, "extract_kw",
                                tuple(sorted(self.extract_kw.items())))
+        # canonicalize the (variant, nvm, placement) trio: `placement` is
+        # authoritative; explicit legacy kwargs override it (the sentinel
+        # tells an omitted kwarg from an explicit nvm=None)
+        pl, v, n = self.placement, self.variant, self.nvm
+        if isinstance(v, Placement):           # positional Placement
+            if pl is not None and pl != v:
+                raise TypeError(
+                    "DesignPoint: got two different placements (via "
+                    "variant= and placement=)")
+            pl, v = v, None
+        if pl is None:
+            pl = Placement.variant(v or "sram",
+                                   None if n is _UNSET else n)
+        elif v is not None and v != pl.label:
+            pl = Placement.variant(v, pl.nvm if n is _UNSET else n)
+        elif n is not _UNSET and n != pl.nvm:
+            pl = pl.with_nvm(n)
+        object.__setattr__(self, "placement", pl)
+        object.__setattr__(self, "variant", pl.label)
+        object.__setattr__(self, "nvm", pl.nvm)
 
     # --- convenience --------------------------------------------------------
     def with_(self, **changes) -> "DesignPoint":
+        if "placement" in changes:
+            # an explicit placement supersedes the canonicalized legacy
+            # fields; placement=None resets the trio to the SRAM baseline
+            changes.setdefault("variant", None)
+            changes.setdefault("nvm", _UNSET)
         return replace(self, **changes)
 
     @property
@@ -82,6 +133,16 @@ class DesignPoint:
         if isinstance(self.workload, str):
             return self.workload
         return getattr(self.workload, "name", "custom")
+
+    def arch_spec(self):
+        """Unsized ``ArchSpec`` for this point's (arch, pe_config) — owns
+        the cpu asymmetry (the CPU model takes no pe_config; ``get_arch``
+        would warn). Level NAMES/classes are what placement selectors
+        resolve against, and sizing does not change them."""
+        from repro.core.archspec import get_arch
+        if self.arch == "cpu":
+            return get_arch("cpu")
+        return get_arch(self.arch, pe_config=self.pe_config)
 
     def precision(self) -> Tuple[Optional[int], Optional[int], Optional[int]]:
         """Operand-width overrides as a hashable (weight, act, psum) tuple

@@ -1,9 +1,15 @@
 """Verbatim copy of the SEED nested-loop DSE pipeline (pre-DesignSpace).
 
 This is the reference the parity suite in ``test_space.py`` compares the
-declarative ``DesignSpace``/``Evaluator`` sweeps against. It calls the raw
-core modules directly with no caching, exactly as ``core.dse`` did before
-the experiment API existed. Do not "modernize" this file — its value is
+declarative ``DesignSpace``/``Evaluator`` sweeps against — and, since the
+``Placement`` axis replaced the ``(variant, nvm)`` pair (ISSUE 4), the
+reference ``tests/test_placement.py`` holds the ``Placement.variant``
+shims to byte-identically. Because ``archspec.apply_variant`` itself
+became a thin Placement wrapper, the SEED's literal per-variant tech
+mapping is inlined below (``apply_variant``) so this file stays
+reference-grade rather than circular. It calls the raw core modules
+directly with no caching, exactly as ``core.dse`` did before the
+experiment API existed. Do not "modernize" this file — its value is
 being frozen.
 """
 from __future__ import annotations
@@ -16,10 +22,24 @@ from repro.core import area as area_mod
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core import workload as wl
-from repro.core.archspec import ArchSpec, apply_variant, get_arch
+from repro.core.archspec import ArchSpec, get_arch
 from repro.core.dataflow import (map_workload, required_act_kb,
                                  required_weight_kb)
 from repro.core.energy import EnergyReport, price
+
+
+def apply_variant(spec: ArchSpec, variant: str, nvm: str) -> ArchSpec:
+    """Verbatim SEED implementation (pre-Placement) — the frozen mapping
+    the placement shims are held byte-identical to."""
+    if variant == "sram":
+        return spec
+    if variant == "p0":
+        mapping = {l.name: nvm for l in spec.levels if l.cls == "weight"}
+    elif variant == "p1":
+        mapping = {l.name: nvm for l in spec.levels}
+    else:
+        raise ValueError(variant)
+    return spec.with_tech(mapping)
 
 IPS_MIN = {"detnet": 10.0, "edsnet": 0.1}
 NODES_FIG2F = (45, 40, 28, 22, 7)

@@ -1,0 +1,379 @@
+"""Placement-axis tests: construction validation, legacy (variant, nvm)
+shim byte-parity across every registered paper space, lattice enumeration
+properties (hypolite), the placement sweep's hybrid-dominance claim, and
+the get_arch ignored-kwarg asymmetry."""
+import math
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import legacy_reference as legacy
+from repro.core import devices as dev
+from repro.core import dse
+from repro.core import experiment as xp
+from repro.core import nvm as nvm_mod
+from repro.core.archspec import (MemLevel, apply_variant, get_arch)
+from repro.core.energy import price
+from repro.core.placement import Placement
+from repro.core.space import DesignPoint, DesignSpace
+
+ALL_TECHS = ("sram", "stt", "sot", "vgsot")
+
+
+# ---------------------------------------------------------------------------
+# satellite: technology names are validated at construction, naming the level
+# ---------------------------------------------------------------------------
+
+def test_memlevel_rejects_unknown_tech_naming_level():
+    with pytest.raises(ValueError, match=r"gwb.*sttt"):
+        MemLevel("gwb", "weight", 256, 4, 64, tech="sttt")
+
+
+def test_with_tech_rejects_unknown_tech_and_level():
+    arch = get_arch("simba", pe_config="v2")
+    with pytest.raises(ValueError, match=r"gwb.*sttt"):
+        arch.with_tech({"gwb": "sttt"})
+    with pytest.raises(KeyError, match=r"bogus_level"):
+        arch.with_tech({"bogus_level": "stt"})
+
+
+def test_placement_rejects_unknown_tech_at_construction():
+    with pytest.raises(ValueError, match=r"sttt"):
+        Placement.per_level({"gwb": "sttt"})
+    with pytest.raises(ValueError, match=r"sttt"):
+        Placement.uniform("sttt")
+    with pytest.raises(ValueError, match=r"sttt"):
+        Placement.variant("p0", "sttt")
+    with pytest.raises(ValueError, match=r"sttt"):
+        Placement.enumerate("simba", ("sram", "sttt"))
+
+
+def test_design_point_typod_nvm_fails_at_construction():
+    """The regression the satellite names: nvm='sttt' used to surface as a
+    bare KeyError deep inside pricing; now it fails at point construction
+    with the device named."""
+    with pytest.raises(ValueError, match=r"sttt"):
+        DesignPoint("detnet", "simba", 7, "p0", nvm="sttt")
+
+
+def test_apply_variant_unknown_variant_still_rejected():
+    with pytest.raises(ValueError, match=r"p7"):
+        apply_variant(get_arch("simba", pe_config="v2"), "p7", "stt")
+
+
+def test_placement_name_selector_mismatch_names_hierarchy():
+    pl = Placement.per_level({"pe_wb": "stt"})      # a simba level name
+    ey = get_arch("eyeriss", pe_config="v2")
+    with pytest.raises(ValueError, match=r"pe_wb.*gwb"):
+        pl.techs_for(ey.levels)
+
+
+def test_placement_class_selector_is_vacuous_when_absent():
+    """Class selectors are set-selectors: an arch without output buffers
+    ignores an output=... entry instead of erroring (cross-arch sweeps)."""
+    pl = Placement.per_level({"output": "stt"})
+    ey = get_arch("eyeriss", pe_config="v2")        # no output-class level
+    assert pl.techs_for(ey.levels) == [l.tech for l in ey.levels]
+
+
+def test_deferred_entry_without_device_is_a_clear_error():
+    pl = Placement.variant("p0")                    # nvm deferred
+    arch = get_arch("simba", pe_config="v2")
+    with pytest.raises(ValueError, match=r"defers"):
+        pl.techs_for(arch.levels)
+
+
+# ---------------------------------------------------------------------------
+# satellite: get_arch ignored-kwarg asymmetry (cpu vs systolic)
+# ---------------------------------------------------------------------------
+
+def test_get_arch_cpu_warns_on_ignored_pe_config():
+    with pytest.warns(UserWarning, match=r"pe_config"):
+        spec = get_arch("cpu", pe_config="v1")
+    assert spec == get_arch("cpu")
+
+
+def test_get_arch_rejects_unknown_kwargs_both_classes():
+    with pytest.raises(TypeError, match=r"bogus"):
+        get_arch("cpu", bogus=1)
+    with pytest.raises(TypeError, match=r"bogus"):
+        get_arch("simba", bogus=1)
+    # systolic archs ACCEPT pe_config (the asymmetry under test)
+    assert get_arch("simba", pe_config="v1").pe_x == 16
+
+
+# ---------------------------------------------------------------------------
+# canonicalization: legacy kwargs and Placement are the SAME point
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_canonicalize_to_placement():
+    p = DesignPoint("detnet", "simba", 7, "p0", nvm="stt")
+    q = DesignPoint("detnet", "simba", 7,
+                    placement=Placement.variant("p0", "stt"))
+    assert p == q and hash(p) == hash(q)
+    assert p.variant == "p0" and p.nvm == "stt"
+    assert p.placement == Placement.variant("p0", "stt")
+
+
+def test_with_keeps_trio_coherent():
+    p = DesignPoint("detnet", "simba", 7, "p0", nvm="stt")
+    assert p.with_(variant="p1").nvm == "stt"           # nvm carried over
+    assert p.with_(nvm="sot").variant == "p0"           # variant carried
+    assert p.with_(nvm=None).nvm is None                # explicit None
+    hybrid = p.with_(placement=Placement.per_level({"gwb": "stt"}))
+    assert hybrid.variant == "gwb=stt"
+    assert hybrid.with_(nvm="sot").placement.entries == (("gwb", "stt"),)
+    # explicit placement=None resets the trio to the SRAM baseline
+    reset = hybrid.with_(placement=None)
+    assert reset.variant == "sram" and reset.placement == Placement.sram()
+
+
+def test_placement_axis_in_design_space_product():
+    pls = Placement.enumerate("simba", ("sram", "stt"),
+                              levels=("gwb", "pe_wb"))
+    s = DesignSpace.product("s", workload="detnet", arch="simba", node=7,
+                            placement=tuple(pls))
+    assert len(s) == 4
+    assert s.axis("placement") == tuple(pls)
+
+
+# ---------------------------------------------------------------------------
+# satellite: shim byte-parity vs the legacy (variant, nvm) path, all spaces
+# ---------------------------------------------------------------------------
+
+def _sweep_space(name):
+    if name == "lm_kv":
+        return xp.SWEEPS[name].space(arch_names=("simba",))
+    if name == "placement":                     # sub-lattice: keep CI fast
+        return xp.SWEEPS[name].space(techs=("sram", "vgsot"))
+    return xp.SWEEPS[name].space()
+
+
+@pytest.mark.parametrize("sweep", sorted(xp.SWEEPS))
+def test_placement_path_byte_identical_to_legacy_variant_path(sweep):
+    """For every point of every registered space: pricing through
+    ``point.placement`` equals pricing through the SEED's frozen
+    ``apply_variant(base, variant, nvm)`` (inlined in legacy_reference)
+    EXACTLY — same arithmetic on the same arch, byte parity, not
+    isclose."""
+    ev = xp.Evaluator()
+    for p in _sweep_space(sweep):
+        if p.variant not in ("sram", "p0", "p1"):
+            continue                           # lattice hybrids have no shim
+        base = ev.base_arch(p)
+        nvm = ev._resolve_nvm(p)
+        assert p.placement.apply(base, default_nvm=nvm) == \
+            legacy.apply_variant(base, p.variant, nvm)
+        got = ev.report(p)
+        ref = price(ev.accesses(p, base),
+                    legacy.apply_variant(base, p.variant, nvm),
+                    p.node, p.workload_name, p.variant, nvm)
+        for attr in ("total_pj", "mem_pj", "mem_read_pj", "mem_write_pj",
+                     "latency_s", "standby_w", "weight_standby_w"):
+            assert getattr(got, attr) == getattr(ref, attr), (sweep, p, attr)
+        assert got.levels.keys() == ref.levels.keys()
+
+
+def test_placement_shim_rows_byte_identical_to_seed_reference():
+    """End-to-end shim parity: the frozen seed pipeline rows vs the
+    placement-canonicalized sweeps (the fig5 rows carry energy, power AND
+    cross-over; table2 carries area)."""
+    for new, ref in ((dse.sweep_fig5(n_points=5),
+                      legacy.sweep_fig5(n_points=5)),
+                     (dse.table2_area(), legacy.table2_area()),
+                     (dse.table3_ips(), legacy.table3_ips())):
+        assert len(new) == len(ref)
+        for n, r in zip(new, ref):
+            assert set(n) == set(r)
+            for k in r:
+                if isinstance(r[k], float):
+                    assert math.isclose(n[k], r[k], rel_tol=1e-12,
+                                        abs_tol=1e-15), k
+                else:
+                    assert n[k] == r[k], k
+
+
+def test_uniform_sram_lattice_point_prices_like_baseline():
+    """An explicit all-sram lattice point is the same hardware as the
+    legacy variant='sram' point: identical pricing, and the pairing helper
+    treats it as a baseline."""
+    ev = xp.Evaluator()
+    legacy_p = DesignPoint("detnet", "simba", 7, "sram")
+    lattice_p = DesignPoint(
+        "detnet", "simba", 7,
+        placement=Placement.per_level(
+            {l.name: "sram" for l in get_arch("simba",
+                                              pe_config="v2").levels}))
+    a, b = ev.report(legacy_p), ev.report(lattice_p)
+    assert a.total_pj == b.total_pj and a.latency_s == b.latency_s
+    assert lattice_p.placement.converts_nothing
+    mram, pairs = nvm_mod.sram_pairs(
+        [lattice_p, DesignPoint("detnet", "simba", 7, "p1", nvm="stt")])
+    assert mram == [1] and pairs == [0]
+
+
+# ---------------------------------------------------------------------------
+# satellite: lattice enumeration + with_level properties (hypolite-driven)
+# ---------------------------------------------------------------------------
+
+@given(arch=st.sampled_from(["cpu", "eyeriss", "simba"]),
+       n_techs=st.integers(1, 4),
+       n_levels=st.integers(1, 3))
+@settings(max_examples=24, deadline=None)
+def test_enumerate_covers_exactly_techs_pow_levels(arch, n_techs, n_levels):
+    spec = get_arch(arch) if arch == "cpu" else get_arch(arch,
+                                                         pe_config="v2")
+    techs = ALL_TECHS[:n_techs]
+    levels = tuple(l.name for l in spec.levels)[:n_levels]
+    pls = Placement.enumerate(spec, techs, levels=levels)
+    assert len(pls) == len(techs) ** len(levels)
+    assert len(set(pls)) == len(pls)           # distinct AND hashable
+    # every placement resolves to a distinct per-level tech vector
+    vecs = {tuple(pl.techs_for(spec.levels)) for pl in pls}
+    assert len(vecs) == len(pls)
+
+
+@given(i=st.integers(0, 255),
+       level_j=st.integers(0, 3),
+       tech=st.sampled_from(ALL_TECHS))
+@settings(max_examples=40, deadline=None)
+def test_with_level_round_trips(i, level_j, tech):
+    spec = get_arch("simba", pe_config="v2")
+    pls = Placement.enumerate(spec, ALL_TECHS)
+    pl = pls[i]
+    name = spec.levels[level_j].name
+    orig = dict(pl.entries)[name]
+    moved = pl.with_level(name, tech)
+    assert moved.with_level(name, orig) == pl          # round-trip
+    got = moved.techs_for(spec.levels)[level_j]
+    assert got == tech                                 # move took effect
+    if tech != orig:
+        assert moved != pl
+
+
+def test_enumerate_rejects_unknown_level():
+    with pytest.raises(ValueError, match=r"bogus"):
+        Placement.enumerate("simba", ("sram",), levels=("bogus",))
+
+
+def test_with_level_wins_over_later_class_entry():
+    """Regression: a with_level move must WIN the ordered resolution even
+    when a later class/'*' entry also matches the level (the in-place edit
+    used to be silently overridden while the label claimed the new tech)."""
+    spec = get_arch("simba", pe_config="v2")
+    pl = Placement.per_level([("gwb", "stt"), ("weight", "sot")])
+    moved = pl.with_level("gwb", "vgsot")
+    assert moved.techs_for(spec.levels)[0] == "vgsot"
+    # and the label agrees with what actually resolves
+    assert "gwb=vgsot" in moved.label
+    star = Placement.uniform("sot").with_level("accum_buf", "stt")
+    assert star.techs_for(spec.levels) == ["sot", "sot", "sot", "stt"]
+
+
+# ---------------------------------------------------------------------------
+# SWEEPS["placement"]: one columnar pass, hybrids vs the paper corners
+# ---------------------------------------------------------------------------
+
+def test_placement_sweep_prices_full_lattice_in_one_pass():
+    ev = xp.Evaluator()
+    rows = xp.SWEEPS["placement"].rows(ev)
+    # full 4-tech Simba level lattice, both suite workloads
+    assert len(rows) == 2 * 4 ** 4
+    # ONE columnar pricing pass per plan: a single traffic mapping per
+    # workload and no scalar per-point reports
+    assert ev.cache_info()["traffic"][1] == 2      # misses: one per workload
+    assert ev.cache_info()["report"] == (0, 0)
+
+
+def test_placement_sweep_hybrid_strictly_dominates_corners():
+    """Acceptance: at the paper IPS target at least one hybrid hierarchy
+    strictly beats BOTH P0 and P1 on memory power."""
+    rows = xp.SWEEPS["placement"].rows(xp.Evaluator())
+    for w in ("detnet", "edsnet"):
+        grp = [r for r in rows if r["workload"] == w]
+        dominating = [r for r in grp if r["beats_p0"] and r["beats_p1"]]
+        assert dominating, w
+        best = min(grp, key=lambda r: r["p_mem_w"])
+        assert best["p_mem_w"] < best["p0_p_mem_w"]
+        assert best["p_mem_w"] < best["p1_p_mem_w"]
+        # the best hybrid is on the (P_mem, area) frontier by construction
+        assert best["pareto"]
+        # savings are measured against the all-sram lattice baseline
+        sram_rows = [r for r in grp
+                     if all(t == "sram" for t in r["techs"].values())]
+        assert len(sram_rows) == 1 and sram_rows[0]["savings"] == 0.0
+
+
+def test_placement_sweep_crossover_matches_scalar_oracle():
+    """The sweep's same-placement cross-over (batched bisection vs the
+    all-sram baseline) equals the scalar ``nvm.crossover_ips`` oracle on a
+    sampled hybrid."""
+    ev = xp.Evaluator()
+    space = xp.placement_space(workloads=("detnet",),
+                               techs=("sram", "vgsot"))
+    rows = xp.placement_rows(ev, workloads=("detnet",),
+                             techs=("sram", "vgsot"))
+    pts = list(space)
+    sram_i = next(i for i, p in enumerate(pts)
+                  if p.placement.converts_nothing)
+    for i, (p, r) in enumerate(zip(pts, rows)):
+        if i == sram_i:
+            assert r["crossover_ips"] is None
+            continue
+        ref = nvm_mod.crossover_ips(ev.report(p), ev.report(pts[sram_i]))
+        if ref is None:
+            assert r["crossover_ips"] is None
+        else:
+            assert r["crossover_ips"] == pytest.approx(ref, rel=1e-9)
+
+
+def test_placement_sweep_registered_and_shimmed():
+    assert "placement" in xp.SWEEPS
+    rows = dse.sweep_placement(workloads=("detnet",),
+                               techs=("sram", "vgsot"))
+    assert len(rows) == 2 ** 4
+
+
+def test_placement_sweep_sub_lattice_still_reports_corners():
+    """Regression: a levels= sub-lattice (or a techs menu without the
+    paper device) used to crash because the P0/P1 corners were looked up
+    INSIDE the lattice; corners are now priced alongside it."""
+    rows = xp.placement_rows(xp.Evaluator(), workloads=("detnet",),
+                             levels=("gwb", "pe_wb"), techs=("stt",))
+    assert len(rows) == 1                      # 1-tech, 2-level lattice
+    r = rows[0]
+    assert r["p0_p_mem_w"] > 0 and r["p1_p_mem_w"] > 0
+    # stt weight levels at 7nm beat the vgsot P0 corner (cheaper reads)
+    assert r["beats_p0"]
+    assert r["crossover_ips"] is not None and r["savings"] != 0.0
+
+
+# ---------------------------------------------------------------------------
+# hillclimb placement moves
+# ---------------------------------------------------------------------------
+
+def test_hillclimb_placement_moves_cover_all_single_level_changes():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from tools.hillclimb import _arch_move, placement_moves
+
+    p = DesignPoint("detnet", "simba", 7, "p1", nvm="vgsot")
+    moves = placement_moves(p)
+    # 4 levels x (4 techs - current) = 12 distinct single-level neighbors
+    assert len(moves) == 12
+    assert len(set(moves)) == 12
+    arch = get_arch("simba", pe_config="v2")
+    nvm = "vgsot"
+    cur = p.placement.techs_for(arch.levels, default_nvm=nvm)
+    for m in moves:
+        new = m.placement.techs_for(arch.levels, default_nvm=nvm)
+        assert sum(a != b for a, b in zip(cur, new)) == 1
+    # arch moves drop level-name entries the target arch lacks
+    hybrid = p.with_(placement=p.placement.with_level("pe_wb", "stt"))
+    moved = _arch_move(hybrid, "eyeriss")
+    assert moved.arch == "eyeriss"
+    ey = get_arch("eyeriss", pe_config="v2")
+    moved.placement.techs_for(ey.levels, default_nvm=nvm)  # must not raise

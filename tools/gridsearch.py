@@ -16,11 +16,17 @@ for every cell; the PR-1 Evaluator cached the structure but still built
 ``benchmarks/bench_gridsearch.py`` records the speedups of both steps.
 
     PYTHONPATH=src python tools/gridsearch.py [--limit N] [--top K]
-        [--weight-bits 4] [--act-bits 8]
+        [--weight-bits 4] [--act-bits 8] [--placement weight=stt,unified=sot]
 
 ``--weight-bits/--act-bits`` re-bind the scoring space to a precision
 corner (the targets stay the paper's INT8 numbers — useful as a probe for
 how far quantization moves the savings bands, not as a fit).
+``--placement SEL=TECH[,SEL=TECH...]`` swaps the space's P1 variant for a
+custom per-level placement (DESIGN.md §6 §Placement) — a probe for how a
+hybrid hierarchy would move the p1 band under each device-constant cell.
+The scoring space covers BOTH systolic archs, so use class selectors
+(weight/input/output/unified) or level names they share (``gwb``); a
+simba-only level name like ``input_buf`` fails with the hierarchy named.
 """
 import argparse
 import itertools
@@ -34,6 +40,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core.experiment import IPS_MIN, Evaluator, table3_space
+from repro.core.placement import Placement
 
 T3 = {  # (workload, arch) -> (p0_sav, p1_sav)
     ("detnet", "simba"): (0.27, 0.31),
@@ -50,25 +57,49 @@ GRID = dict(
     vg_write=[0.55, 0.80],
 )
 
-def build_space(weight_bits=None, act_bits=None):
+def parse_placement(s: str) -> Placement:
+    """``"gwb=stt,input_buf=sot"`` -> an ordered per-level ``Placement``
+    (selectors are level names, level classes or ``*``)."""
+    entries = []
+    for part in s.split(","):
+        sel, _, tech = part.partition("=")
+        if not tech:
+            raise ValueError(f"--placement entry {part!r}: want SEL=TECH")
+        entries.append((sel.strip(), tech.strip()))
+    return Placement.per_level(entries)
+
+
+def build_space(weight_bits=None, act_bits=None, placement=None):
     """The Table-3 scoring space, optionally at a precision corner
     (``--weight-bits/--act-bits``): same structure, every point re-bound to
-    the given operand widths (None keeps the paper's INT8)."""
+    the given operand widths (None keeps the paper's INT8). ``placement``
+    (a ``Placement`` or ``SEL=TECH,...`` string) swaps the P1 variant for a
+    custom hierarchy — the placement probe."""
     space = table3_space(node=7)
     if weight_bits is not None or act_bits is not None:
         space = space.map(lambda p: p.with_(weight_bits=weight_bits,
                                             act_bits=act_bits))
+    if placement is not None:
+        if isinstance(placement, str):
+            placement = parse_placement(placement)
+        space = space.map(lambda p: p.with_(placement=placement)
+                          if p.variant == "p1" else p)
     return space
 
 
 def build_indices(space):
     """Row indices for the vectorized score: per (workload, arch) pair the
-    (sram, p0, p1) rows, plus flat (nvm, sram, ips) arrays for the batched
-    savings call. Pure structure — computed once per space."""
-    row = {(p.workload_name, p.arch, p.variant): i
-           for i, p in enumerate(space)}
-    pairs = [(w, a, row[(w, a, "sram")], row[(w, a, "p0")],
-              row[(w, a, "p1")]) for (w, a) in T3]
+    (sram, p0, third-variant) rows — the third variant is p1 or the
+    ``--placement`` probe — plus flat (nvm, sram, ips) arrays for the
+    batched savings call. Pure structure — computed once per space."""
+    by = {}
+    for i, p in enumerate(space):
+        by.setdefault((p.workload_name, p.arch), {})[p.variant] = i
+    pairs = []
+    for (w, a) in T3:
+        d = by[(w, a)]
+        third = next(v for v in d if v not in ("sram", "p0"))
+        pairs.append((w, a, d["sram"], d["p0"], d[third]))
     nvm_rows = np.array([r for (_, _, _, p0, p1) in pairs for r in (p0, p1)])
     sram_rows = np.array([s for (_, _, s, _, _) in pairs for _ in (0, 1)])
     ips = np.array([IPS_MIN[w] for (w, _, _, _, _) in pairs for _ in (0, 1)])
@@ -133,11 +164,12 @@ def apply_knobs(leak, cfm, cfs, vr, vw):
                                          1, 2, True)
 
 
-def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None):
+def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None,
+        placement=None):
     # Structural caches survive device-table mutation (they are geometry
     # only); report caching must stay OFF under mutation.
     ev = Evaluator(cache_reports=False)
-    space = build_space(weight_bits, act_bits)
+    space = build_space(weight_bits, act_bits, placement)
     indices = build_indices(space)
     saved = (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
              dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"])
@@ -145,18 +177,24 @@ def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None):
     combos = itertools.product(*GRID.values())
     if limit is not None:
         combos = itertools.islice(combos, limit)
+    last_exc = None
     try:
         for knobs in combos:
             apply_knobs(*knobs)
             try:
                 err, out = score(ev, space, indices)
-            except Exception:
+            except Exception as e:        # a knob combo can be degenerate
+                last_exc = e
                 continue
             results.append((err, knobs, out))
     finally:
         (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
          dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"]) = saved
 
+    if not results and last_exc is not None:
+        # every cell failed: that is a broken SPACE (e.g. a --placement
+        # naming levels one arch lacks), not a degenerate knob combo
+        raise last_exc
     results.sort(key=lambda r: r[0])
     if not quiet:
         for err, knobs, out in results[:top]:
@@ -179,9 +217,13 @@ def main():
                         "(default: the paper's INT8)")
     p.add_argument("--act-bits", type=int, default=None,
                    help="score the grid at this stored activation width")
+    p.add_argument("--placement", default=None, metavar="SEL=TECH,...",
+                   help="swap the p1 variant for a custom per-level "
+                        "placement (probe, e.g. weight=stt,unified=sot; "
+                        "class selectors span both archs)")
     a = p.parse_args()
     run(limit=a.limit, top=a.top, weight_bits=a.weight_bits,
-        act_bits=a.act_bits)
+        act_bits=a.act_bits, placement=a.placement)
 
 
 if __name__ == "__main__":

@@ -77,6 +77,41 @@ DSE_AXES = dict(
     act_bits=(None, 4),
 )
 
+def _arch_move(point, arch_name):
+    """Arch-axis neighbor: level-NAME placement entries do not transfer
+    between hierarchies, so drop the ones the new arch lacks (class/'*'
+    selectors and the paper-variant shapes carry over untouched)."""
+    from repro.core.placement import Placement
+
+    moved = point.with_(arch=arch_name)
+    arch = moved.arch_spec()
+    keep = ({l.name for l in arch.levels} | {l.cls for l in arch.levels}
+            | {"*"})
+    entries = tuple(e for e in point.placement.entries if e[0] in keep)
+    if entries == point.placement.entries:
+        return moved
+    return moved.with_(
+        placement=Placement.per_level(entries, nvm=point.placement.nvm))
+
+
+def placement_moves(point, techs=None):
+    """Hillclimb neighbors that re-assign ONE memory level's technology
+    (``Placement.with_level``) over the lattice menu
+    (``experiment.PLACEMENT_TECHS`` — the placement dimension, DESIGN.md
+    §6 §Placement), skipping no-op moves against the point's
+    currently-resolved per-level techs."""
+    from repro.core import devices as dev
+    from repro.core.experiment import PLACEMENT_TECHS
+
+    if techs is None:
+        techs = PLACEMENT_TECHS
+    arch = point.arch_spec()
+    default = point.nvm or dev.PAPER_NVM_AT_NODE.get(point.node, "stt")
+    current = point.placement.techs_for(arch.levels, default_nvm=default)
+    return [point.with_(placement=point.placement.with_level(lvl.name, tech))
+            for lvl, cur in zip(arch.levels, current)
+            for tech in techs if tech != cur]
+
 
 def dse_main(a):
     """Greedy local search on the COLUMNAR path: every neighborhood is one
@@ -115,8 +150,11 @@ def dse_main(a):
     while True:
         cur_point = best[0]
         neighbors = [cur_point.with_(**{axis: v})
-                     for axis, values in DSE_AXES.items()
+                     for axis, values in DSE_AXES.items() if axis != "arch"
                      for v in values if v != getattr(cur_point, axis)]
+        neighbors += [_arch_move(cur_point, v) for v in DSE_AXES["arch"]
+                      if v != cur_point.arch]
+        neighbors += placement_moves(cur_point)
         hood = DesignSpace.from_points([cur_point] + neighbors,
                                        name=f"hood{step}")
         cand = best_of(hood)
