@@ -28,6 +28,13 @@ the same way: per-level technology vectors are just rows of the plan's
 variant point — ``--check`` gates the per-placement / per-int8-point cost
 ratio to catch per-placement Python work leaking into the pricing pass.
 
+A two-stream SYSTEM cell (the XR bundle detnet@10 + edsnet@0.1 time-shared
+across the same 256-placement lattice — ``experiment.system_space`` priced
+by ``core.schedule``) is timed alongside: a system point prices two stream
+rows through the same columnar pass plus a constant-cost numpy roll-up, so
+``--check`` gates its per-system cost against the placement cell's
+per-point cost.
+
     PYTHONPATH=src python benchmarks/bench_gridsearch.py [--cells 12]
         [--check benchmarks/baseline_gridsearch.json]
         [--write-baseline benchmarks/baseline_gridsearch.json]
@@ -59,7 +66,8 @@ import legacy_reference as legacy
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
 from repro.core.energy import EnergyReport, LevelEnergy
-from repro.core.experiment import IPS_MIN, Evaluator, placement_space
+from repro.core.experiment import (IPS_MIN, Evaluator, placement_space,
+                                   system_space)
 from tools import gridsearch
 
 
@@ -206,6 +214,15 @@ def placement_cell(ev: Evaluator, space):
     return float(ev.evaluate_table(space).memory_power_at(10.0).min())
 
 
+def system_cell(ev: Evaluator, spoints):
+    """One two-stream SYSTEM cell: the XR bundle time-shared across the
+    full placement lattice (core.schedule) — one per-stream EnergyTable
+    pricing plus the time-multiplexing roll-up, reduced to the best
+    feasible system memory power."""
+    tab = ev.system_table(spoints)
+    return float(np.where(tab.feasible, tab.p_mem_w, np.inf).min())
+
+
 def run_cells(n_cells, score_fn):
     """Score the first n_cells of the tuning grid, return (seconds, errs)."""
     errs = []
@@ -233,6 +250,11 @@ def measure(cells, repeats=3):
     # full Simba placement lattice at one node (4 techs ^ 4 levels = 256
     # hierarchies): one vectorized pricing per cell, re-priced per knob combo
     space_plc = placement_space(workloads=("detnet",), arch="simba", node=7)
+    # two-stream system cell: the XR bundle (detnet@10 + edsnet@0.1) across
+    # the same 256-placement lattice — per-stream pricing + the schedule
+    # roll-up, re-priced per knob combo (geometry cached like the plans)
+    ev_sys = Evaluator(cache_reports=False)
+    space_sys = system_space(arch="simba", node=7)
     # warm the structural/plan caches outside the timed region (the full
     # 216-cell search amortizes this in the first cell)
     gridsearch.score(ev_col)
@@ -240,6 +262,7 @@ def measure(cells, repeats=3):
     pr1_score(ev_pr1)
     gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8)
     placement_cell(ev_plc, space_plc)
+    system_cell(ev_sys, space_sys)
 
     def best_of(score_fn):
         """Min wall time over ``repeats`` passes (noise suppression)."""
@@ -256,6 +279,7 @@ def measure(cells, repeats=3):
     t_w4a8, _ = best_of(
         lambda: gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8))
     t_plc, _ = best_of(lambda: (placement_cell(ev_plc, space_plc), {}))
+    t_sys, _ = best_of(lambda: (system_cell(ev_sys, space_sys), {}))
 
     for ec, ev_, e1, es in zip(errs_col, errs_row, errs_pr1, errs_seed):
         assert math.isclose(ec, es, rel_tol=1e-9), (ec, es)
@@ -276,12 +300,20 @@ def measure(cells, repeats=3):
         speedup_columnar_vs_seed=t_seed / t_col,
         speedup_columnar_vs_pr1=t_pr1 / t_col,
         speedup_columnar_vs_rowview=t_row / t_col,
+        system_ms_per_cell=t_sys / cells * 1e3,
+        system_points=len(space_sys),
         ratio_w4a8_vs_int8=t_w4a8 / t_col,
         # per-PLACEMENT cost vs per-POINT cost of the int8 variant cell:
         # both are single vectorized pricings, so this should sit near (or
         # below — bigger batch amortizes better) 1.0
         ratio_placement_point_vs_int8=(t_plc / len(space_plc))
                                       / (t_col / n_int8),
+        # per-SYSTEM cost vs per-placement cost: a system point prices TWO
+        # stream rows through the same columnar pass plus the constant-cost
+        # schedule roll-up, so this should sit near 2.0; the gate catches
+        # per-system Python work leaking into the system hot path
+        ratio_system_point_vs_placement=(t_sys / len(space_sys))
+                                        / (t_plc / len(space_plc)),
     )
 
 
@@ -313,6 +345,10 @@ def main():
     print(f"placement lattice "
           f"({m['placement_points']:3d} pts): {m['placement_ms_per_cell']:8.2f}"
           f" ms/cell  ({m['ratio_placement_point_vs_int8']:.2f}x int8"
+          f" per-point cost)")
+    print(f"system 2-stream bundle "
+          f"({m['system_points']:3d}): {m['system_ms_per_cell']:8.2f}"
+          f" ms/cell  ({m['ratio_system_point_vs_placement']:.2f}x placement"
           f" per-point cost)")
     print(f"columnar vs PR-1 Evaluator: {m['speedup_columnar_vs_pr1']:.1f}x")
 
@@ -357,6 +393,19 @@ def main():
                   f"{got_p:.2f} (baseline {base_p:.2f}, ceiling {ceil_p:.2f})")
             if got_p > ceil_p:
                 print("FAIL: >2x regression of the placement-lattice cell")
+                failed = True
+        # system guard: a two-stream system prices two rows through the
+        # same columnar pass plus a constant-cost roll-up, so its per-point
+        # cost must not drift away from the placement cell's (catches per-
+        # system/per-stream Python work leaking into the schedule hot path)
+        base_s = base.get("ratio_system_point_vs_placement")
+        if base_s is not None:
+            ceil_s = max(base_s, 1.0) * 2.0
+            got_s = m["ratio_system_point_vs_placement"]
+            print(f"check: per-system vs placement-point cost ratio "
+                  f"{got_s:.2f} (baseline {base_s:.2f}, ceiling {ceil_s:.2f})")
+            if got_s > ceil_s:
+                print("FAIL: >2x regression of the two-stream system cell")
                 failed = True
         if failed:
             sys.exit(1)

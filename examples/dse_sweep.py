@@ -116,6 +116,32 @@ for w in ("detnet", "edsnet"):
               f"({r['savings']:+.0%} vs sram)  area {r['total_mm2']:.2f}mm2"
               f"{'  *pareto' if r['pareto'] else ''}")
 
+# --- Multi-stream system: both XR workloads time-shared on one chip --------
+# The paper prices each pipeline in isolation; SWEEPS["system"] runs the
+# two-workload bundle (detnet@10 + edsnet@0.1 IPS) on ONE accelerator and
+# credits what only shows up at system level: shared standby windows and
+# per-context-switch weight reload, which NVM weight levels eliminate
+# (DESIGN.md §7 §System).
+print("\n=== Multi-stream system (simba @7nm): XR bundle, reload mode ===")
+srows = SWEEPS["system"].rows(ev)
+scorners = {r["placement"]: r for r in srows
+            if r["placement"] in ("sram", "p0", "p1")}
+for v in ("sram", "p0", "p1"):
+    r = scorners[v]
+    print(f"  {v:4s}: P_mem {r['p_mem_w']*1e6:6.1f} uW "
+          f"({r['savings']:+.0%} vs sram)  reload {r['reload_uw']:5.1f} uW  "
+          f"duty {r['duty']:.4f}  best-single {r['best_single_savings']:+.0%}"
+          f"{'  >single' if r['beats_single'] else ''}")
+hyb = sorted((r for r in srows if r["placement"] not in scorners),
+             key=lambda r: r["p_mem_w"])
+n_beat = sum(r["beats_single"] for r in srows)
+print(f"  {n_beat} placements beat their best single-stream savings; "
+      f"top hybrids:")
+for r in hyb[:3]:
+    print(f"    {r['placement']:<48s} {r['p_mem_w']*1e6:7.1f} uW "
+          f"({r['savings']:+.0%} sys vs {r['best_single_savings']:+.0%} "
+          f"single)  area {r['total_mm2']:.2f}mm2")
+
 # Frontier helpers: which (arch, variant, device) corners are Pareto-optimal
 # in (EDP, P_mem@IPS_min) for DetNet at 7nm?
 space = (SWEEPS["fig3d"].space()

@@ -365,6 +365,21 @@ def _device_col(plan: PricingPlan, attr: str) -> np.ndarray:
     return table[plan.tech_idx]
 
 
+def unit_energy_pj_per_bit(plan: PricingPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(point, level) access energies (read_pj_per_bit, write_pj_per_bit)
+    under the plan's technology map — the exact formula ``price`` uses.
+    Exposed so the system reload model (``core.schedule``) charges context-
+    switch weight writes at the same unit cost as inference traffic; device
+    constants are re-read on every call (mutation-safe)."""
+    rm = _device_col(plan, "read_mult")
+    wm = _device_col(plan, "write_mult")
+    scale = _node_col(plan, dev.NODE_ENERGY_SCALE)
+    e45 = dev.sram_e45_pj_per_bit(plan.macro_kb)
+    cf = dev.cell_energy_fraction(plan.macro_kb)
+    base_e = e45 * scale[:, None]
+    return base_e * ((1.0 - cf) + cf * rm), base_e * ((1.0 - cf) + cf * wm)
+
+
 def _node_col(plan: PricingPlan, table: Dict[int, float]) -> np.ndarray:
     return np.array([table[n] for n in plan.node_list])[plan.node_idx]
 
@@ -515,8 +530,6 @@ def price(plan: PricingPlan) -> EnergyTable:
         z2, z1 = np.zeros((0, 0)), np.zeros(0)
         return EnergyTable(plan, z2, z2, z2, z2, z2, z2.astype(bool),
                            z1, z1, z1, z1, np.empty(0, object))
-    rm = _device_col(plan, "read_mult")
-    wm = _device_col(plan, "write_mult")
     lm = _device_col(plan, "leak_mult")
     rc = _device_col(plan, "read_cycles")
     wc = _device_col(plan, "write_cycles")
@@ -527,11 +540,7 @@ def price(plan: PricingPlan) -> EnergyTable:
                           for n, c in plan.clock_keys])
     clock = clock_tbl[plan.clock_idx]                       # (P,)
 
-    e45 = dev.sram_e45_pj_per_bit(plan.macro_kb)
-    cf = dev.cell_energy_fraction(plan.macro_kb)
-    base_e = e45 * scale[:, None]                           # sram pj/bit
-    er = base_e * ((1.0 - cf) + cf * rm)
-    ew = base_e * ((1.0 - cf) + cf * wm)
+    er, ew = unit_energy_pj_per_bit(plan)
     read_pj = plan.read_bits * er
     write_pj = plan.write_bits * ew
     port = np.where(plan.weight_cls, 1.0, dev.ACT_PORT_LEAK_MULT)
@@ -568,10 +577,15 @@ def price(plan: PricingPlan) -> EnergyTable:
 
 
 def _pmem(e_mem_j, latency_s, standby_w, wake_j, ips):
-    """P(ips) = ips*E_mem + idle_frac*P_standby + ips*E_wake (elementwise)."""
+    """P(ips) = ips*E_mem + idle_frac*P_standby + ips*idle_frac*E_wake.
+
+    The wake ramp is charged per GATING event, not per inference: at duty=1
+    back-to-back inferences never power the gated levels off, so the rate of
+    wake events falls with the idle fraction (``nvm.memory_power_w`` is the
+    scalar oracle of this formula — keep the two in lockstep)."""
     duty = np.minimum(1.0, ips * latency_s)
     idle = np.maximum(0.0, 1.0 - duty)
-    return ips * e_mem_j + idle * standby_w + ips * wake_j
+    return ips * e_mem_j + idle * standby_w + ips * idle * wake_j
 
 
 def _pweight(e_weight_j, latency_s, weight_standby_w, ips):

@@ -209,3 +209,17 @@ def compute_area_mm2(num_macs: int, node: int) -> float:
 
 STANDBY_CURRENT_RATIO = 100.0   # standby current 100x below read current [11]
 WAKEUP_TIME_S = 100e-6          # accelerator wake-up time
+
+# ---------------------------------------------------------------------------
+# multi-stream (time-shared) system model (core.schedule)
+# ---------------------------------------------------------------------------
+
+# Off-module weight staging for a context switch. The paper's design is
+# DRAM-free: the on-chip weight buffer IS the backing store for ONE
+# workload's weights, so when a time-shared accelerator switches to a
+# workload whose weights are not retained on chip, they must be re-fetched
+# over the host/flash link (LPDDR/NOR-class: device + PHY + controller,
+# ~tens of pJ/bit; node-independent — IO interconnect does not scale with
+# the logic node). Non-volatile weight levels retain through both power-off
+# and context switches, which is where MRAM residency "pays twice".
+WEIGHT_STAGE_PJ_PER_BIT = 20.0

@@ -124,3 +124,14 @@ def sweep_placement(workloads=PAPER_SUITE, arch: str = "simba",
     (DESIGN.md §6 §Placement)."""
     return xp.SWEEPS["placement"].rows(workloads=workloads, arch=arch,
                                        node=node, **kw)
+
+
+def sweep_system(streams=None, arch: str = "simba", node: int = 7,
+                 **kw) -> List[Dict]:
+    """Multi-stream system plane: the XR bundle (hand detection @10 IPS +
+    eye segmentation @0.1 IPS by default) time-shared on one accelerator
+    across the placement lattice (DESIGN.md §7 §System)."""
+    if streams is None:
+        streams = xp.XR_BUNDLE
+    return xp.SWEEPS["system"].rows(streams=streams, arch=arch, node=node,
+                                    **kw)

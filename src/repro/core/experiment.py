@@ -42,6 +42,7 @@ from repro.core import area as area_mod
 from repro.core import columns
 from repro.core import devices as dev
 from repro.core import nvm as nvm_mod
+from repro.core import schedule
 from repro.core import workload as wl
 from repro.core.archspec import ArchSpec, get_arch
 from repro.core.dataflow import (map_workload, map_workload_columns,
@@ -210,6 +211,22 @@ class Evaluator:
                                          full_act_kb=a_kb)
         return self._archs[key]
 
+    def sized_arch(self, arch_name: str, pe_config: str, w_kb: float,
+                   a_kb: float) -> ArchSpec:
+        """Sized, SRAM-technology arch for EXPLICIT buffer sizes — the
+        system plane's entry into the arch cache (``core.schedule`` sizes
+        for the max/union over a SystemPoint's streams). Shares cache keys
+        with the suite-sized ``base_arch`` path, so a single-stream system
+        and the equivalent suite point build the arch once."""
+        key = (arch_name, pe_config, w_kb, a_kb)
+        hit = key in self._archs
+        self._tick("arch", hit)
+        if not hit:
+            self._archs[key] = size_arch(arch_name, (), pe_config,
+                                         full_weight_kb=w_kb,
+                                         full_act_kb=a_kb)
+        return self._archs[key]
+
     def accesses(self, point: DesignPoint,
                  base: Optional[ArchSpec] = None) -> list:
         """Mapped access counts — variant/node-independent, cached per
@@ -246,28 +263,30 @@ class Evaluator:
         constants, so they stay valid across device-table mutation — the
         gridsearch hot loop re-prices a cached plan every cell."""
         pts = tuple(points)
-        key = (pts, for_area)
-        hit = key in self._plans
-        self._tick("plan", hit)
-        if hit:
-            self._plans.move_to_end(key)
-        else:
-            groups: "OrderedDict[Tuple, int]" = OrderedDict()
-            tables: List[columns.TrafficTable] = []
-            gidx: List[int] = []
-            default = "vgsot" if for_area else "stt"
-            for p in pts:
-                base = self.base_arch(p)
-                gkey = (p.workload_key(), base)
-                if gkey not in groups:
-                    groups[gkey] = len(tables)
-                    tables.append(self.traffic(p, base))
-                gidx.append(groups[gkey])
-            nvms = [self._resolve_nvm(p, default=default) for p in pts]
-            self._plans[key] = columns.build_plan(tables, gidx, pts, nvms)
-            if len(self._plans) > self._plans_max:
-                self._plans.popitem(last=False)
-        return self._plans[key]
+        default = "vgsot" if for_area else "stt"
+        return self._cached_plan(
+            (pts, for_area),
+            lambda: self.assemble_plan(((p, self.base_arch(p)) for p in pts),
+                                       default=default))
+
+    def assemble_plan(self, pairs, default: str) -> columns.PricingPlan:
+        """Shared plan assembly for (point, sized arch) pairs: group by
+        mapped traffic group, flatten, resolve per-point default NVMs —
+        the ONE implementation behind ``plan``, the system energy plane
+        (``schedule.system_geometry``) and the system area plane."""
+        groups: "OrderedDict[Tuple, int]" = OrderedDict()
+        tables: List[columns.TrafficTable] = []
+        gidx: List[int] = []
+        dps: List[DesignPoint] = []
+        for dp, base in pairs:
+            gkey = (dp.workload_key(), base)
+            if gkey not in groups:
+                groups[gkey] = len(tables)
+                tables.append(self.traffic(dp, base))
+            gidx.append(groups[gkey])
+            dps.append(dp)
+        nvms = [self._resolve_nvm(p, default=default) for p in dps]
+        return columns.build_plan(tables, gidx, tuple(dps), nvms)
 
     # --- pricing -----------------------------------------------------------
     @staticmethod
@@ -373,6 +392,55 @@ class Evaluator:
                     self._areas[p] = rep
         return ResultSet([(p, out[p]) for p in pts], name=name)
 
+    # --- system (multi-stream) plane ----------------------------------------
+    def _cached_plan(self, key, build):
+        """Shared LRU slot for system geometries/plans (same residency rules
+        as ``plan``)."""
+        hit = key in self._plans
+        self._tick("plan", hit)
+        if hit:
+            self._plans.move_to_end(key)
+        else:
+            self._plans[key] = build()
+            if len(self._plans) > self._plans_max:
+                self._plans.popitem(last=False)
+        return self._plans[key]
+
+    def system_geometry(self, spoints) -> schedule.SystemGeometry:
+        """Cached flattening of ``SystemPoint``s to per-stream plan rows
+        (geometry only — survives device-table mutation)."""
+        pts = tuple(spoints)
+        return self._cached_plan(
+            (pts, "system"), lambda: schedule.system_geometry(self, pts))
+
+    def system_table(self, spoints) -> schedule.SystemTable:
+        """Price a list of ``SystemPoint``s: one vectorized ``EnergyTable``
+        pass over all (system, stream) rows + the time-multiplexing roll-up
+        (``core.schedule``)."""
+        return schedule.price(self.system_geometry(spoints))
+
+    def system_area_table(self, spoints) -> columns.AreaTable:
+        """Area of each system's shared (sized + placed) accelerator — one
+        row per system (streams share the silicon, so any stream's geometry
+        prices it)."""
+        pts = tuple(spoints)
+
+        def build():
+            pairs = []
+            for sp in pts:
+                w_kb, a_kb, _ = schedule.system_sizing(self, sp)
+                base = self.sized_arch(sp.arch, sp.pe_config, w_kb, a_kb)
+                pairs.append((sp.stream_points()[0], base))
+            return self.assemble_plan(pairs, default="vgsot")
+
+        return columns.area(self._cached_plan((pts, "system_area"), build))
+
+    def evaluate_system(self, spoints) -> "ResultSet":
+        """ResultSet counterpart: (SystemPoint, SystemReport) rows."""
+        tab = self.system_table(spoints)
+        return ResultSet([(p, tab.row(i)) for i, p in enumerate(tab.points)],
+                         name=getattr(spoints, "name", "system"))
+
 
 # ---------------------------------------------------------------------------
 # ResultSet
@@ -408,9 +476,9 @@ class ResultSet:
         return len(self._pairs)
 
     def __getitem__(self, key):
-        if isinstance(key, DesignPoint):
-            return self._by_point[key]
-        return self._pairs[key]
+        if isinstance(key, (int, np.integer, slice)):
+            return self._pairs[key]
+        return self._by_point[key]      # DesignPoint or SystemPoint
 
     def points(self) -> List[DesignPoint]:
         return [p for p, _ in self._pairs]
@@ -430,6 +498,10 @@ class ResultSet:
         elif isinstance(r, area_mod.AreaReport):
             row.update(nvm=p.nvm, total_mm2=r.total_mm2,
                        memory_mm2=r.memory_mm2, compute_mm2=r.compute_mm2)
+        elif isinstance(r, schedule.SystemReport):
+            row.update(nvm=p.nvm, mode=p.mode, ips=sum(p.ips),
+                       duty=r.duty, feasible=r.feasible,
+                       p_mem_w=r.p_mem_w, reload_w=r.reload_w)
         return row
 
     def to_rows(self, row_fn: Optional[Callable[[DesignPoint, Any], Dict]]
@@ -876,6 +948,106 @@ def placement_rows(ev: Evaluator, workloads=PAPER_SUITE, arch: str = "simba",
     return rows
 
 
+# --- beyond-paper: multi-stream system plane (concurrent workloads) ---------
+
+# The paper's two applications as ONE time-shared system: hand detection at
+# its minimum rate plus eye segmentation at its minimum rate, on a single
+# accelerator (DESIGN.md §7 §System).
+XR_BUNDLE = (schedule.Stream("detnet", IPS_MIN["detnet"]),
+             schedule.Stream("edsnet", IPS_MIN["edsnet"]))
+
+
+class SystemSpace(list):
+    """A list of ``SystemPoint``s with a DesignSpace-style repr/name
+    (``DesignSpace`` itself is DesignPoint-typed; system points carry their
+    own stream axis, so the system sweeps stay plain point lists)."""
+
+    def __init__(self, points, name: str = "system"):
+        super().__init__(points)
+        self.name = name
+
+    def __repr__(self):
+        return f"SystemSpace({self.name!r}, {len(self)} systems)"
+
+
+def system_space(streams=XR_BUNDLE, arch: str = "simba", node: int = 7,
+                 techs=PLACEMENT_TECHS, levels=None,
+                 mode: str = "reload") -> SystemSpace:
+    """The stream bundle across the per-level technology lattice: one
+    ``SystemPoint`` per placement, all sharing (arch, node, mode)."""
+    streams = tuple(streams)
+    pls = Placement.enumerate(arch, tuple(techs), levels=levels)
+    return SystemSpace(
+        [schedule.SystemPoint(streams, arch, node, placement=pl, mode=mode)
+         for pl in pls],
+        name=f"system:{'+'.join(s.name for s in streams)}")
+
+
+def system_rows(ev: Evaluator, streams=XR_BUNDLE, arch: str = "simba",
+                node: int = 7, techs=PLACEMENT_TECHS, levels=None,
+                mode: str = "reload") -> List[Dict]:
+    """Price the stream bundle across the placement lattice and report, per
+    placement: system memory power, feasibility (sum of duties), savings vs
+    the all-SRAM SYSTEM baseline, the reload share, the shared-silicon
+    area, and — the system-level claim — each placement's own SINGLE-stream
+    savings, so the rows show where time-sharing beats the paper's
+    isolated-pipeline analysis (reload + shared-standby elimination are
+    only visible at system level).
+
+    Everything is priced in ONE pass: lattice systems, the paper-corner
+    systems (sram/p0/p1, appended like ``placement_rows`` does), and the
+    per-stream single-stream systems used for the comparison baselines."""
+    space = system_space(streams, arch, node, techs, levels, mode)
+    pts = list(space)
+    streams = tuple(streams)
+    nvm = dev.PAPER_NVM_AT_NODE.get(node, "stt")
+    corner_pls = {v: Placement.variant(v, nvm) for v in ("sram", "p0", "p1")}
+    corner_at = {}
+    corner_pts = []
+    for v, pl in corner_pls.items():
+        corner_at[v] = len(pts) + len(corner_pts)
+        corner_pts.append(pts[0].with_(placement=pl))
+    sys_pts = pts + corner_pts
+    # single-stream systems for every placement (lattice + corners): the
+    # per-stream baselines the system savings are compared against
+    single_at: Dict[Tuple[int, int], int] = {}
+    single_pts = []
+    for i, p in enumerate(sys_pts):
+        for k, s in enumerate(streams):
+            single_at[(i, k)] = len(sys_pts) + len(single_pts)
+            single_pts.append(p.with_(streams=(s,)))
+    all_pts = sys_pts + single_pts
+    tab = ev.system_table(all_pts)              # ONE vectorized pricing pass
+    areas = ev.system_area_table(sys_pts)
+    pm = tab.p_mem_w
+    sram_i = corner_at["sram"]
+
+    def single_savings(i: int, k: int) -> float:
+        return 1.0 - (pm[single_at[(i, k)]] / pm[single_at[(sram_i, k)]])
+
+    rows = []
+    for i, p in enumerate(sys_pts):
+        singles = {s.name: float(single_savings(i, k))
+                   for k, s in enumerate(streams)}
+        best_single = max(singles.values())
+        savings = float(1.0 - pm[i] / pm[sram_i])
+        rows.append(dict(
+            workloads=p.workload_name, arch=p.arch, node=p.node, mode=p.mode,
+            placement=p.variant,
+            ips=dict((s.name, s.ips) for s in streams),
+            duty=float(tab.duty[i]), feasible=bool(tab.feasible[i]),
+            p_mem_w=float(pm[i]), sram_p_mem_w=float(pm[sram_i]),
+            savings=savings,
+            reload_uw=float(tab.reload_w[i]) * 1e6,
+            single_savings=singles,
+            best_single_savings=float(best_single),
+            beats_single=bool(savings > best_single),
+            beats_p0=bool(pm[i] < pm[corner_at["p0"]]),
+            beats_p1=bool(pm[i] < pm[corner_at["p1"]]),
+            total_mm2=float(areas.total_mm2[i])))
+    return rows
+
+
 SWEEPS: Dict[str, Sweep] = {
     "fig2f": Sweep("fig2f", "Fig 2(f): EDP vs node, SRAM-only platforms",
                    fig2f_space, fig2f_rows),
@@ -897,4 +1069,7 @@ SWEEPS: Dict[str, Sweep] = {
     "placement": Sweep("placement", "Beyond-paper: per-level technology "
                        "lattice — hybrid hierarchies vs the P0/P1 corners",
                        placement_space, placement_rows),
+    "system": Sweep("system", "Beyond-paper: multi-stream XR system — "
+                    "concurrent workloads time-shared on one accelerator",
+                    system_space, system_rows),
 }

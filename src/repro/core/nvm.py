@@ -9,7 +9,14 @@ inferences:
     ramp per inference event.
 
 Average memory power at inference rate ``ips``:
-    P(ips) = ips * E_mem_inference + idle_frac * P_standby + ips * E_wake
+    P(ips) = ips * E_mem_inference + idle_frac * P_standby
+             + ips * idle_frac * E_wake
+
+The wake ramp is charged per power-GATING event, not per inference: gated
+levels only pay the 100us ramp when they actually powered off since the
+previous inference, and the rate of gating events shrinks with the idle
+fraction (at duty = 1 back-to-back inferences never power down, so the
+wake term vanishes instead of being charged ``ips`` times).
 """
 from __future__ import annotations
 
@@ -42,7 +49,11 @@ def memory_power_w(report: EnergyReport, ips: float) -> float:
     e_mem_j = report.mem_pj * 1e-12
     duty = min(1.0, ips * report.latency_s)
     idle_frac = max(0.0, 1.0 - duty)
-    return ips * e_mem_j + idle_frac * report.standby_w + ips * wake_energy_j(report)
+    # wake is charged per gating EVENT (ips * idle_frac of them per second),
+    # not per inference: at duty=1 gated levels never power off between
+    # back-to-back inferences. Columnar twin: columns._pmem.
+    return (ips * e_mem_j + idle_frac * report.standby_w
+            + ips * idle_frac * wake_energy_j(report))
 
 
 def weight_memory_power_w(report: EnergyReport, ips: float) -> float:
@@ -114,7 +125,19 @@ def sram_pairs(points):
             if p.placement.converts_nothing}
     mram = [i for i, p in enumerate(pts)
             if not p.placement.converts_nothing]
-    return mram, [sram[key(pts[i])] for i in mram]
+    pairs = []
+    for i in mram:
+        j = sram.get(key(pts[i]))
+        if j is None:
+            p = pts[i]
+            raise ValueError(
+                f"sram_pairs: no all-SRAM baseline for converting point "
+                f"(workload={p.workload_name!r}, arch={p.arch!r}, "
+                f"node={p.node}, precision={p.precision_label!r}) — include "
+                f"a converts-nothing point with the same key in the space "
+                f"(e.g. variant='sram' or an all-'sram' lattice point)")
+        pairs.append(j)
+    return mram, pairs
 
 
 def memory_power_curve(report: EnergyReport, ips_grid) -> np.ndarray:

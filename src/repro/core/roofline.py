@@ -11,6 +11,7 @@ reduce-scatter / all-to-all / collective-permute).
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
@@ -27,10 +28,18 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
+    # sub-byte integers (packed two per byte in HLO buffers)
+    "s4": 0.5, "u4": 0.5,
+    # fp8 family (quantized serving dumps)
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
 }
 
-# e.g.  bf16[4096,1024]{1,0}  or  f32[]  or (tuple shapes handled per element)
-_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([0-9,]*)\]")
+# e.g.  bf16[4096,1024]{1,0}  or  f32[]  or (tuple shapes handled per
+# element). The dtype token admits interior digits so fp8 names like
+# `f8e4m3fn` match (the old `[a-z]+\d*` token stopped at the first
+# letter-after-digit and silently dropped every fp8 shape).
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -43,7 +52,8 @@ def _shape_bytes(shape_str: str) -> int:
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        # sub-byte dtypes pack two elements per byte; odd counts round up
+        total += int(math.ceil(n * _DTYPE_BYTES[dt]))
     return total
 
 

@@ -11,6 +11,13 @@ reference-grade rather than circular. It calls the raw core modules
 directly with no caching, exactly as ``core.dse`` did before the
 experiment API existed. Do not "modernize" this file — its value is
 being frozen.
+
+What is frozen here is the PIPELINE (extraction, sizing, mapping, pricing
+structure), not the shared power model: ``nvm.memory_power_w`` is called
+through, so the wake-per-gating-EVENT bugfix (wake energy scales with
+``ips * idle_frac``, not ``ips`` — at duty=1 gated levels never power off
+between back-to-back inferences) moves these reference rows and the
+experiment rows identically, keeping the parity suite meaningful.
 """
 from __future__ import annotations
 

@@ -146,7 +146,7 @@ def test_placement_axis_in_design_space_product():
 def _sweep_space(name):
     if name == "lm_kv":
         return xp.SWEEPS[name].space(arch_names=("simba",))
-    if name == "placement":                     # sub-lattice: keep CI fast
+    if name in ("placement", "system"):         # sub-lattice: keep CI fast
         return xp.SWEEPS[name].space(techs=("sram", "vgsot"))
     return xp.SWEEPS[name].space()
 

@@ -1,0 +1,379 @@
+"""Multi-stream system-model tests (core.schedule) + this PR's latent-bug
+satellites: hypolite properties (single-stream parity with the existing
+``memory_power_w`` path, duty-sum feasibility, reload-vs-union
+monotonicity), the SWEEPS["system"] acceptance claim, the
+wake-per-gating-event fix, the ``sram_pairs`` unmatched-baseline error and
+the roofline sub-byte/fp8 dtype parsing."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import devices as dev
+from repro.core import dse
+from repro.core import experiment as xp
+from repro.core import nvm as nvm_mod
+from repro.core import roofline as rl
+from repro.core import schedule
+from repro.core.placement import Placement
+from repro.core.schedule import Stream, SystemPoint
+from repro.core.space import DesignPoint
+
+ALL_TECHS = ("sram", "stt", "sot", "vgsot")
+
+_EV = xp.Evaluator()        # module-shared: structural caches amortize
+
+
+def _placement(i: int) -> Placement:
+    """Deterministic pick from the full Simba lattice."""
+    return Placement.enumerate("simba", ALL_TECHS)[i % 256]
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def test_stream_rejects_nonpositive_ips():
+    with pytest.raises(ValueError, match=r"ips"):
+        Stream("detnet", 0.0)
+    with pytest.raises(ValueError, match=r"ips"):
+        Stream("detnet", -1.0)
+
+
+def test_system_point_canonicalizes_trio_like_design_point():
+    a = SystemPoint((Stream("detnet", 10.0),), "simba", 7, "p0", nvm="stt")
+    b = SystemPoint((Stream("detnet", 10.0),), "simba", 7,
+                    placement=Placement.variant("p0", "stt"))
+    assert a == b and hash(a) == hash(b)
+    assert a.variant == "p0" and a.nvm == "stt"
+    assert a.workload_name == "detnet"
+    with pytest.raises(ValueError, match=r"mode"):
+        SystemPoint((Stream("detnet", 1.0),), "simba", 7, mode="bogus")
+    with pytest.raises(ValueError, match=r"at least one stream"):
+        SystemPoint((), "simba", 7)
+
+
+def test_system_point_stream_points_share_the_accelerator():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, "p1", nvm="vgsot")
+    dps = sp.stream_points()
+    assert [d.workload for d in dps] == ["detnet", "edsnet"]
+    assert all(d.placement == sp.placement for d in dps)
+    assert all(d.suite is None for d in dps)
+
+
+# ---------------------------------------------------------------------------
+# hypolite property: single-stream parity with the existing per-stream path
+# ---------------------------------------------------------------------------
+
+@given(pl_i=st.integers(0, 255),
+       workload=st.sampled_from(["detnet", "edsnet"]),
+       ips=st.floats(0.01, 100.0),
+       node=st.sampled_from([28, 7]))
+@settings(max_examples=24, deadline=None)
+def test_single_stream_system_reduces_to_memory_power_w(pl_i, workload, ips,
+                                                        node):
+    """THE correctness oracle: a one-stream SystemPoint is byte-identical
+    to the existing per-stream columnar path (and matches the scalar
+    ``nvm.memory_power_w`` oracle) — no reload, sizing = the workload's
+    own, wake/standby exactly the single-pipeline temporal model."""
+    pl = _placement(pl_i)
+    sp = SystemPoint((Stream(workload, ips),), "simba", node, placement=pl)
+    tab = _EV.system_table([sp])
+    dp = DesignPoint(workload, "simba", node, placement=pl, suite=None)
+    ref = _EV.evaluate_table([dp]).memory_power_at(ips)[0]
+    assert tab.p_mem_w[0] == ref                      # byte-identical
+    assert tab.reload_w[0] == 0.0 and tab.switch_rate[0] == 0.0
+    scalar = nvm_mod.memory_power_w(_EV.report(dp), ips)
+    assert tab.p_mem_w[0] == pytest.approx(scalar, rel=1e-9)
+
+
+def test_single_stream_union_equals_reload():
+    """With one stream the union of weight footprints IS the max: both
+    contention modes build the same hardware and price identically."""
+    for mode in schedule.MODES:
+        sp = SystemPoint((Stream("detnet", 10.0),), "simba", 7, "p1",
+                         mode=mode)
+        tab = _EV.system_table([sp])
+        assert tab.reload_w[0] == 0.0
+    r = _EV.system_table(
+        [SystemPoint((Stream("detnet", 10.0),), "simba", 7, "p1")])
+    u = _EV.system_table(
+        [SystemPoint((Stream("detnet", 10.0),), "simba", 7, "p1",
+                     mode="union")])
+    assert r.p_mem_w[0] == u.p_mem_w[0]
+
+
+# ---------------------------------------------------------------------------
+# hypolite property: duty-sum feasibility
+# ---------------------------------------------------------------------------
+
+@given(ips1=st.floats(0.01, 5e4), ips2=st.floats(0.01, 5e4))
+@settings(max_examples=24, deadline=None)
+def test_feasibility_is_exactly_duty_sum_le_one(ips1, ips2):
+    sp = SystemPoint((Stream("detnet", ips1), Stream("edsnet", ips2)),
+                     "simba", 7, "sram")
+    tab = _EV.system_table([sp])
+    lat = tab.energy.latency_s
+    duty = ips1 * lat[0] + ips2 * lat[1]
+    assert tab.duty[0] == pytest.approx(duty, rel=1e-12)
+    assert bool(tab.feasible[0]) == (duty <= 1.0)
+    # each stream alone is feasible whenever the bundle is
+    if tab.feasible[0]:
+        assert ips1 <= 1.0 / lat[0] and ips2 <= 1.0 / lat[1]
+
+
+def test_saturated_system_is_infeasible_and_reported():
+    """Driving one stream past the pipeline's max rate must flag the
+    system, not silently clamp it."""
+    sp = SystemPoint((Stream("detnet", 1e6), Stream("edsnet", 0.1)),
+                     "simba", 7, "sram")
+    tab = _EV.system_table([sp])
+    assert tab.duty[0] > 1.0 and not tab.feasible[0]
+    rep = tab.row(0)
+    assert not rep.feasible and rep.idle_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypolite property: reload-vs-union monotonicity
+# ---------------------------------------------------------------------------
+
+@given(pl_i=st.integers(0, 255))
+@settings(max_examples=16, deadline=None)
+def test_reload_vs_union_monotonicity(pl_i):
+    """Union sizing trades silicon for energy: it never pays reload, never
+    has LESS standby or area than the reload-sized system, and its weight
+    buffer holds every stream at once."""
+    pl = _placement(pl_i)
+    r = SystemPoint(xp.XR_BUNDLE, "simba", 7, placement=pl)
+    u = r.with_(mode="union")
+    tab = _EV.system_table([r, u])
+    assert tab.reload_w[1] == 0.0
+    assert tab.reload_w[0] >= 0.0
+    assert tab.standby_w[1] >= tab.standby_w[0]
+    areas = _EV.system_area_table([r, u])
+    assert areas.total_mm2[1] >= areas.total_mm2[0]
+    # all weight levels non-volatile -> nothing to reload even in reload mode
+    if all(t != "sram" for sel, t in pl.entries
+           if sel in ("gwb", "pe_wb")):
+        assert tab.reload_w[0] == 0.0
+
+
+def test_reload_monotone_in_interferer_rate():
+    """More frequent preemption -> more reload power (all-SRAM system)."""
+    rates = (0.1, 1.0, 5.0)
+    pts = [SystemPoint((Stream("detnet", 10.0), Stream("edsnet", r)),
+                       "simba", 7, "sram") for r in rates]
+    tab = _EV.system_table(pts)
+    assert tab.reload_w[0] < tab.reload_w[1] < tab.reload_w[2]
+    # switch rate into each stream: min(own rate, everyone else's sum) —
+    # the batching scheduler preempts the 10-IPS stream only when the
+    # slow stream is due
+    np.testing.assert_allclose(tab.switch_rate,
+                               [0.1, 0.1, 1.0, 1.0, 5.0, 5.0])
+
+
+def test_reload_charged_only_to_volatile_weight_levels():
+    """An NVM weight hierarchy retains both models through the switch: the
+    all-weight-NVM system pays zero reload while the SRAM system pays the
+    off-module staging + volatile writes."""
+    sram = SystemPoint(xp.XR_BUNDLE, "simba", 7, "sram")
+    p0 = SystemPoint(xp.XR_BUNDLE, "simba", 7, "p0", nvm="stt")
+    hybrid = SystemPoint(
+        xp.XR_BUNDLE, "simba", 7,
+        placement=Placement.per_level({"gwb": "stt"}))   # pe_wb stays SRAM
+    tab = _EV.system_table([sram, p0, hybrid])
+    assert tab.reload_w[0] > 0.0
+    assert tab.reload_w[1] == 0.0
+    # gwb retains on chip: no off-module staging, but the volatile pe_wb
+    # still pays its write — strictly between the two corners
+    assert 0.0 < tab.reload_w[2] < tab.reload_w[0]
+
+
+# ---------------------------------------------------------------------------
+# SWEEPS["system"]: acceptance + wiring
+# ---------------------------------------------------------------------------
+
+def test_system_sweep_acceptance_hybrid_beats_best_single_stream():
+    """Acceptance: the two-workload XR bundle across the placement lattice
+    reports at least one hybrid whose SYSTEM-level savings vs the all-SRAM
+    system exceed that placement's best single-stream savings (reload
+    elimination + shared standby are system-only credits)."""
+    rows = xp.SWEEPS["system"].rows(_EV)
+    assert len(rows) == 256 + 3                     # lattice + paper corners
+    by_pl = {r["placement"]: r for r in rows}
+    sram = by_pl["sram"]
+    assert sram["savings"] == 0.0 and sram["reload_uw"] > 0.0
+    assert all(r["feasible"] for r in rows)
+    winners = [r for r in rows if r["beats_single"]
+               and r["placement"] not in ("sram", "p0", "p1")]
+    assert winners, "no hybrid beats its best single-stream savings"
+    # and the credit is material, not a rounding artifact
+    margin = max(r["savings"] - r["best_single_savings"] for r in winners)
+    assert margin > 0.01
+    # the winning hybrids still deliver real system-level savings
+    assert max(r["savings"] for r in winners) > 0.20
+
+
+def test_system_sweep_prices_in_one_pass_and_registers():
+    ev = xp.Evaluator()
+    rows = xp.SWEEPS["system"].rows(ev, techs=("sram", "vgsot"))
+    assert len(rows) == 2 ** 4 + 3
+    # one traffic mapping per (workload, sized arch): bundle sizing (shared)
+    # + the two single-stream sizings = 3 mapped groups, no scalar reports
+    assert ev.cache_info()["report"] == (0, 0)
+    assert ev.cache_info()["traffic"][1] == 3
+    shim = dse.sweep_system(techs=("sram", "vgsot"))
+    assert [r["placement"] for r in shim] == [r["placement"] for r in rows]
+
+
+def test_evaluate_system_resultset_rows():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, "p1")
+    rs = _EV.evaluate_system([sp])
+    assert len(rs) == 1
+    rep = rs[sp]
+    assert isinstance(rep, schedule.SystemReport)
+    assert rep.p_mem_w > 0 and rep.feasible
+    assert len(rep.shares) == 2
+    assert rep.shares[0].report.workload == "detnet"
+    row = rs.to_rows()[0]
+    assert row["workload"] == "detnet+edsnet"
+    assert row["mode"] == "reload" and row["feasible"]
+    assert row["p_mem_w"] == pytest.approx(rep.p_mem_w)
+
+
+def test_system_report_rollup_consistent():
+    """Scalar view arithmetic: the row's components re-add to p_mem_w."""
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, "sram")
+    rep = _EV.system_table([sp]).row(0)
+    dyn = sum(s.stream.ips * s.report.mem_pj * 1e-12 for s in rep.shares)
+    reload_w = sum(s.switch_rate * s.reload_j for s in rep.shares)
+    total = (dyn + rep.idle_frac * rep.standby_w
+             + rep.wake_rate * rep.wake_j + reload_w)
+    assert rep.p_mem_w == pytest.approx(total, rel=1e-12)
+    assert rep.dyn_w == pytest.approx(dyn, rel=1e-12)
+    assert rep.reload_w == pytest.approx(reload_w, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# tools: hillclimb / gridsearch system modes
+# ---------------------------------------------------------------------------
+
+def test_hillclimb_system_moves_apply_to_system_points():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from tools.hillclimb import _arch_move, parse_streams, placement_moves
+
+    assert parse_streams(["detnet=10", "edsnet=0.1"]) == xp.XR_BUNDLE
+    with pytest.raises(ValueError, match=r"WORKLOAD=IPS"):
+        parse_streams(["detnet"])
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, "p1", nvm="vgsot")
+    moves = placement_moves(sp)
+    assert len(moves) == 12 and all(isinstance(m, SystemPoint)
+                                    for m in moves)
+    moved = _arch_move(sp.with_(placement=sp.placement.with_level(
+        "pe_wb", "stt")), "eyeriss")
+    assert moved.arch == "eyeriss" and moved.streams == sp.streams
+
+
+def test_gridsearch_system_probe_smoke():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from tools.gridsearch import system_probe
+
+    out = system_probe(_EV, arch_names=("simba",), quiet=True)
+    assert set(out) == {("simba", "p0"), ("simba", "p1")}
+    assert all(-1.0 < v < 1.0 for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# satellite: wake energy is charged per GATING EVENT, not per inference
+# ---------------------------------------------------------------------------
+
+def test_wake_energy_vanishes_at_full_duty():
+    """At duty=1 back-to-back inferences never power-gate: the wake term
+    must be zero in both the scalar and columnar paths (the old model
+    charged ips * E_wake even with no idle window)."""
+    dp = DesignPoint("detnet", "simba", 7, "p1")
+    rep = _EV.report(dp)
+    assert nvm_mod.wake_energy_j(rep) > 0.0
+    at_max = nvm_mod.memory_power_w(rep, rep.max_ips)
+    assert at_max == pytest.approx(rep.max_ips * rep.mem_pj * 1e-12,
+                                   rel=1e-12)
+    tab = _EV.evaluate_table([dp])
+    assert tab.memory_power_at(float(rep.max_ips))[0] == \
+        pytest.approx(at_max, rel=1e-9)
+
+
+@given(ips_frac=st.floats(0.0001, 0.999))
+@settings(max_examples=20, deadline=None)
+def test_wake_term_scales_with_gating_events(ips_frac):
+    """P(ips) decomposes as dyn + idle*standby + (ips*idle)*E_wake, scalar
+    and columnar agreeing to 1e-9."""
+    dp = DesignPoint("detnet", "simba", 7, "p1")
+    rep = _EV.report(dp)
+    ips = ips_frac * rep.max_ips
+    idle = 1.0 - ips * rep.latency_s
+    expect = (ips * rep.mem_pj * 1e-12 + idle * rep.standby_w
+              + ips * idle * nvm_mod.wake_energy_j(rep))
+    assert nvm_mod.memory_power_w(rep, ips) == pytest.approx(expect,
+                                                             rel=1e-12)
+    tab = _EV.evaluate_table([dp])
+    assert tab.memory_power_at(ips)[0] == pytest.approx(expect, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# satellite: sram_pairs names the unmatched baseline key
+# ---------------------------------------------------------------------------
+
+def test_sram_pairs_unmatched_baseline_names_key():
+    """Regression: a converting point with no same-key all-SRAM baseline
+    (e.g. a sub-lattice space without the sram corner) used to surface as
+    a bare KeyError on an opaque tuple."""
+    pts = [DesignPoint("detnet", "simba", 7, "p1", nvm="stt"),
+           DesignPoint("edsnet", "simba", 7, "sram")]   # wrong workload
+    with pytest.raises(ValueError) as ei:
+        nvm_mod.sram_pairs(pts)
+    msg = str(ei.value)
+    for frag in ("detnet", "simba", "7", "int8", "all-SRAM baseline"):
+        assert frag in msg, msg
+
+
+def test_sram_pairs_still_pairs_when_baseline_present():
+    pts = [DesignPoint("detnet", "simba", 7, "sram"),
+           DesignPoint("detnet", "simba", 7, "p1", nvm="stt")]
+    mram, sram = nvm_mod.sram_pairs(pts)
+    assert mram == [1] and sram == [0]
+
+
+# ---------------------------------------------------------------------------
+# satellite: roofline sub-byte / fp8 dtypes
+# ---------------------------------------------------------------------------
+
+QUANT_HLO = """
+  %w4 = s4[1024,512]{1,0} convert(%w)
+  %u = u4[33]{0} convert(%v)
+  %f8 = f8e4m3fn[4096,64]{1,0} convert(%x)
+  %f8b = f8e5m2[128]{0} convert(%y)
+  %ag = f8e4m3fn[2048,32]{1,0} all-gather(%f8), replica_groups={}
+  %ar = s4[512,512]{1,0} all-reduce(%w4), to_apply=%add
+"""
+
+
+def test_shape_bytes_counts_subbyte_and_fp8():
+    """Regression: s4/u4 and the fp8 family were silently dropped —
+    `f8e4m3fn` did not even match the old shape regex — undercounting HLO
+    bytes for quantized models."""
+    assert rl._shape_bytes("s4[1024,512]{1,0}") == 1024 * 512 // 2
+    assert rl._shape_bytes("u4[33]{0}") == 17          # odd count rounds up
+    assert rl._shape_bytes("f8e4m3fn[4096,64]{1,0}") == 4096 * 64
+    assert rl._shape_bytes("f8e5m2[128]{0}") == 128
+    assert rl._shape_bytes("bf16[8,8]{1,0}") == 128    # unchanged
+
+
+def test_collective_bytes_sees_quantized_collectives():
+    out = rl.collective_bytes(QUANT_HLO)
+    assert out["all-gather"] == 2048 * 32
+    assert out["all-reduce"] == 512 * 512 // 2

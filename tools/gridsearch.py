@@ -27,6 +27,10 @@ hybrid hierarchy would move the p1 band under each device-constant cell.
 The scoring space covers BOTH systolic archs, so use class selectors
 (weight/input/output/unified) or level names they share (``gwb``); a
 simba-only level name like ``input_buf`` fails with the hierarchy named.
+``--system`` additionally prices the best cell at SYSTEM level: the paper
+XR bundle time-shared on one accelerator (core.schedule) — shows how the
+knobs move the multi-stream savings bands (standby sharing + reload
+elimination), which have no paper targets and are reported as a probe.
 """
 import argparse
 import itertools
@@ -164,8 +168,35 @@ def apply_knobs(leak, cfm, cfs, vr, vw):
                                          1, 2, True)
 
 
+def system_probe(ev: Evaluator, arch_names=("simba", "eyeriss"),
+                 node: int = 7, quiet=False):
+    """Multi-stream probe under the CURRENT device tables: the paper XR
+    bundle (detnet@10 + edsnet@0.1 time-shared, core.schedule) priced as
+    sram/p0/p1 systems per arch. Returns {(arch, variant): system savings
+    vs the all-SRAM system} — how a knob combo moves the SYSTEM-level
+    bands, which fold in standby sharing and weight-reload elimination on
+    top of the single-stream Table-3 fit."""
+    from repro.core.experiment import XR_BUNDLE
+    from repro.core.schedule import SystemPoint
+
+    out = {}
+    for a in arch_names:
+        spts = [SystemPoint(XR_BUNDLE, a, node, v)
+                for v in ("sram", "p0", "p1")]
+        tab = ev.system_table(spts)
+        for i, v in enumerate(("p0", "p1")):
+            out[(a, v)] = float(1.0 - tab.p_mem_w[i + 1] / tab.p_mem_w[0])
+        if not quiet:
+            print(f"   system {a:8s}: "
+                  f"p0 {out[(a, 'p0')]:+.1%}  p1 {out[(a, 'p1')]:+.1%}  "
+                  f"(reload@sram "
+                  f"{float(tab.reload_w[0])*1e6:.1f} uW, duty "
+                  f"{float(tab.duty[0]):.4f})")
+    return out
+
+
 def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None,
-        placement=None):
+        placement=None, system=False):
     # Structural caches survive device-table mutation (they are geometry
     # only); report caching must stay OFF under mutation.
     ev = Evaluator(cache_reports=False)
@@ -204,6 +235,23 @@ def run(limit=None, top=8, quiet=False, weight_bits=None, act_bits=None,
                 t = T3[k]
                 print(f"   {k[0]:8s}/{k[1]:8s}: p0={v[0]:+.1%} (t {t[0]:+.0%})  "
                       f"p1={v[1]:+.1%} (t {t[1]:+.0%})")
+    if system:
+        # system mode: re-apply the best cell's knobs and report how they
+        # move the MULTI-STREAM bands (no paper targets exist at system
+        # level — this is a probe, not a fit term). Return shape is fixed
+        # by the flag, not by whether any cell survived.
+        results_system = {}
+        if results:
+            if not quiet:
+                print("-- system probe (best cell): XR bundle, "
+                      "time-shared --")
+            try:
+                apply_knobs(*results[0][1])
+                results_system = system_probe(ev, quiet=quiet)
+            finally:
+                (dev.SRAM_LEAK_UW_PER_KB_45, dev.CELL_FRAC_MIN,
+                 dev.CELL_FRAC_SLOPE, dev.DEVICES["vgsot"]) = saved
+        return results, results_system
     return results
 
 
@@ -221,9 +269,13 @@ def main():
                    help="swap the p1 variant for a custom per-level "
                         "placement (probe, e.g. weight=stt,unified=sot; "
                         "class selectors span both archs)")
+    p.add_argument("--system", action="store_true",
+                   help="also probe the best cell at SYSTEM level: the XR "
+                        "bundle (detnet@10 + edsnet@0.1) time-shared per "
+                        "arch (core.schedule)")
     a = p.parse_args()
     run(limit=a.limit, top=a.top, weight_bits=a.weight_bits,
-        act_bits=a.act_bits, placement=a.placement)
+        act_bits=a.act_bits, placement=a.placement, system=a.system)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,14 @@ handful of cached mappings instead of re-running the pipeline.
 
   PYTHONPATH=src python tools/hillclimb.py --dse --workload detnet \
       [--objective edp|energy|pmem] [--ips 10]
+
+System mode (--system): the same greedy search on the MULTI-STREAM plane
+(core.schedule): a bundle of concurrent workloads time-shared on one
+accelerator, moving (arch, node, pe_config, contention mode, per-level
+placement) to minimize feasible system memory power.
+
+  PYTHONPATH=src python tools/hillclimb.py --system \
+      [--stream detnet=10 --stream edsnet=0.1]
 """
 import argparse
 import collections
@@ -177,6 +185,82 @@ def dse_main(a):
 
 
 # ---------------------------------------------------------------------------
+# system mode: greedy search over the multi-stream plane (core.schedule)
+# ---------------------------------------------------------------------------
+
+SYSTEM_AXES = dict(
+    node=(45, 40, 28, 22, 7),
+    pe_config=("v1", "v2"),
+    mode=("reload", "union"),
+)
+
+
+def parse_streams(specs):
+    """``["detnet=10", "edsnet=0.1"]`` -> Stream tuple."""
+    from repro.core.schedule import Stream
+
+    out = []
+    for s in specs:
+        name, _, ips = s.partition("=")
+        if not ips:
+            raise ValueError(f"--stream {s!r}: want WORKLOAD=IPS")
+        out.append(Stream(name.strip(), float(ips)))
+    return tuple(out)
+
+
+def system_main(a):
+    """Greedy local search over the SYSTEM design space: the stream bundle
+    stays fixed, (arch, node, pe_config, contention mode, per-level
+    placement) move. Each neighborhood is ONE ``SystemTable`` pricing;
+    infeasible systems (sum of duties > 1) are never selected."""
+    import numpy as np
+
+    from repro.core.experiment import XR_BUNDLE, Evaluator
+    from repro.core.schedule import SystemPoint
+
+    streams = parse_streams(a.stream) if a.stream else XR_BUNDLE
+    ev = Evaluator()
+
+    def best_of(points):
+        tab = ev.system_table(points)
+        vals = np.where(tab.feasible, tab.p_mem_w, np.inf)
+        i = int(np.argmin(vals))
+        return points[i], float(vals[i]), (tab, i)
+
+    point = SystemPoint(streams, "simba", 45, "sram")
+    best = best_of([point])
+    if not np.isfinite(best[1]):
+        raise SystemExit(f"stream bundle {[s.name for s in streams]} is "
+                         f"infeasible even on the starting system")
+    label = "+".join(f"{s.name}@{s.ips:g}" for s in streams)
+    print(f"=== system hillclimb: {label}, objective P_mem ===")
+    t0 = time.monotonic()
+    step = 0
+    while True:
+        cur = best[0]
+        neighbors = [cur.with_(**{axis: v})
+                     for axis, values in SYSTEM_AXES.items()
+                     for v in values if v != getattr(cur, axis)]
+        neighbors += [_arch_move(cur, v) for v in DSE_AXES["arch"]
+                      if v != cur.arch]
+        neighbors += placement_moves(cur)
+        cand = best_of([cur] + neighbors)
+        if cand[1] >= best[1]:
+            break
+        best = cand
+        step += 1
+        p = best[0]
+        print(f"  step {step}: {p.arch}/{p.node}nm/{p.mode}/{p.variant}"
+              f"  P_mem={best[1]*1e6:.1f} uW")
+    p, val, (tab, i) = best
+    print(f"\nlocal optimum after {step} steps "
+          f"({time.monotonic()-t0:.1f}s):")
+    print(f"  {p.arch} @ {p.node}nm, mode={p.mode}, {p.variant}: "
+          f"P_mem={val*1e6:.1f} uW  duty={float(tab.duty[i]):.4f}  "
+          f"reload={float(tab.reload_w[i])*1e6:.2f} uW")
+
+
+# ---------------------------------------------------------------------------
 # roofline mode (dry-run compile probe)
 # ---------------------------------------------------------------------------
 
@@ -228,6 +312,13 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--dse", action="store_true",
                    help="hillclimb the edge-DSE design space instead")
+    p.add_argument("--system", action="store_true",
+                   help="hillclimb the multi-stream SYSTEM plane (one "
+                        "accelerator time-shared by --stream bundles)")
+    p.add_argument("--stream", action="append", default=[],
+                   metavar="WORKLOAD=IPS",
+                   help="[system] stream spec (repeatable; default: the "
+                        "paper XR bundle detnet=10, edsnet=0.1)")
     p.add_argument("--workload", default="detnet",
                    help="[dse] workload / config name")
     p.add_argument("--objective", default="edp",
@@ -243,7 +334,9 @@ def main():
                    help="sharding rule override, e.g. expert_cap=pod,data")
     p.add_argument("--profile", action="store_true")
     a = p.parse_args()
-    if a.dse:
+    if a.system:
+        system_main(a)
+    elif a.dse:
         dse_main(a)
     else:
         if not (a.arch and a.shape):
