@@ -12,6 +12,29 @@ import json
 import time
 
 
+def analysis_smoke():
+    """Static-analysis pass (repro.analysis) timed like a figure: the
+    CK/UN/FZ/PO sweep over src/repro must stay cheap enough to sit in the
+    edit loop, and any NEW (non-baselined) finding fails the smoke."""
+    from pathlib import Path
+
+    from repro.analysis.findings import Baseline
+    from repro.analysis.runner import run_analysis
+
+    findings = run_analysis()
+    baseline = Baseline.load(
+        Path(__file__).resolve().parent.parent / "tools" /
+        "analysis_baseline.json")
+    new, suppressed, stale = baseline.split(findings)
+    if new:
+        raise SystemExit("analysis_smoke: new static-analysis findings:\n"
+                         + "\n".join(f.render() for f in new))
+    rows = [{"checker": f.checker, "rule": f.rule, "symbol": f.symbol}
+            for f in findings]
+    return rows, (f"{len(suppressed)} baselined, {len(stale)} stale, "
+                  f"0 new")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", default=None)
@@ -21,7 +44,7 @@ def main() -> None:
 
     all_rows = {}
     print("name,us_per_call,derived")
-    fns = list(paper.ALL) + [roofline_table.roofline_table]
+    fns = list(paper.ALL) + [roofline_table.roofline_table, analysis_smoke]
     for fn in fns:
         t0 = time.monotonic()
         rows, derived = fn()

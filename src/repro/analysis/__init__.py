@@ -1,0 +1,25 @@
+"""Static analysis for the pricing stack (stdlib ``ast`` only).
+
+Four checkers guard the bug classes that have bitten this repo before:
+
+* **CK** (`ck.py`) — cache-key soundness: every ``DesignPoint`` /
+  ``SystemPoint`` attribute a memoized computation reads must be folded
+  into its cache key, and caches sharing one dict must have
+  non-colliding key shapes.
+* **UN** (`un.py`) — unit/dimension analysis over the energy algebra:
+  no pJ+W additions, no kB x pJ/bit products assigned to ``*_pj`` names
+  without the x8192 conversion.
+* **FZ** (`fz.py`) — frozen-axis invariants: DSE-axis dataclasses must
+  be ``frozen=True`` with recursively hashable fields; memoizing
+  classes may not mutate ``self`` outside their declared cache dicts.
+* **PO** (`po.py`) — parity-oracle coverage: every public columnar
+  symbol in ``core/columns.py`` must be referenced by at least one test.
+
+Entry points: ``python tools/analyze.py`` or ``python -m repro.analysis``.
+Accepted findings live in ``tools/analysis_baseline.json`` (see
+``runner.py``); anything *new* fails ``--check``.
+"""
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.runner import main, run_analysis
+
+__all__ = ["Finding", "Severity", "main", "run_analysis"]

@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — same CLI as tools/analyze.py."""
+import sys
+
+from repro.analysis.runner import main
+
+sys.exit(main())

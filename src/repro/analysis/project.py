@@ -1,0 +1,254 @@
+"""AST project model: module loading, symbol index, call resolution.
+
+Loads every ``*.py`` under a package root (and optional extra roots like
+``tests/``) into :class:`ModuleInfo` records and builds a flat qualname
+index of functions and classes so checkers can resolve ``self.foo()``,
+``module.func()`` and imported names to their defining AST nodes.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                # "repro.core.experiment.Evaluator.plan"
+    module: str                  # dotted module name
+    cls: Optional[str]           # enclosing class name, or None
+    node: ast.FunctionDef
+    is_property: bool = False
+
+
+@dataclass
+class ClassInfo:
+    qualname: str
+    module: str
+    node: ast.ClassDef
+    methods: Dict[str, FuncInfo] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleInfo:
+    name: str                    # dotted module name
+    path: Path
+    source: str
+    tree: ast.Module
+    # local name -> fully qualified target ("dev" -> "repro.core.devices")
+    imports: Dict[str, str] = field(default_factory=dict)
+
+    def rel_path(self, root: Path) -> str:
+        try:
+            return self.path.relative_to(root).as_posix()
+        except ValueError:
+            return self.path.as_posix()
+
+
+def decorator_names(node) -> List[str]:
+    """Rightmost dotted names of a def/class node's decorators."""
+    out = []
+    for dec in node.decorator_list:
+        base = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(base, ast.Attribute):
+            out.append(base.attr)
+        elif isinstance(base, ast.Name):
+            out.append(base.id)
+    return out
+
+
+class Project:
+    """Parsed view of one or more source trees."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FuncInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        # repo root used for repo-relative finding paths
+        self.root: Path = Path(".")
+
+    # ------------------------------------------------------------- loading
+
+    @classmethod
+    def load(cls, package_root: Path, package_name: str,
+             repo_root: Optional[Path] = None) -> "Project":
+        """Parse every .py under `package_root` as package `package_name`."""
+        proj = cls()
+        proj.root = repo_root if repo_root is not None else package_root
+        proj.add_tree(package_root, package_name)
+        return proj
+
+    def add_tree(self, root: Path, package_name: str) -> None:
+        for path in sorted(root.rglob("*.py")):
+            rel = path.relative_to(root)
+            parts = list(rel.with_suffix("").parts)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            modname = ".".join([package_name] + parts) if parts else \
+                package_name
+            self.add_module(path, modname)
+
+    def add_module(self, path: Path, modname: str,
+                   source: Optional[str] = None) -> ModuleInfo:
+        src = source if source is not None else path.read_text()
+        tree = ast.parse(src, filename=str(path))
+        mod = ModuleInfo(name=modname, path=path, source=src, tree=tree)
+        self._index_imports(mod)
+        self.modules[modname] = mod
+        self._index_symbols(mod)
+        return mod
+
+    def _index_imports(self, mod: ModuleInfo) -> None:
+        pkg_parts = mod.name.split(".")
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    target = alias.name if alias.asname else \
+                        alias.name.split(".")[0]
+                    mod.imports[local] = target
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    # relative import: resolve against this module's package
+                    base_parts = pkg_parts[:-node.level] if node.level <= \
+                        len(pkg_parts) else []
+                    base = ".".join(base_parts)
+                    src_mod = f"{base}.{node.module}" if node.module else base
+                else:
+                    src_mod = node.module or ""
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    local = alias.asname or alias.name
+                    mod.imports[local] = f"{src_mod}.{alias.name}"
+
+    def _index_symbols(self, mod: ModuleInfo) -> None:
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if isinstance(node, ast.FunctionDef):
+                    fi = FuncInfo(f"{mod.name}.{node.name}", mod.name, None,
+                                  node)
+                    self.functions[fi.qualname] = fi
+            elif isinstance(node, ast.ClassDef):
+                ci = ClassInfo(f"{mod.name}.{node.name}", mod.name, node)
+                for sub in node.body:
+                    if isinstance(sub, ast.FunctionDef):
+                        fi = FuncInfo(f"{ci.qualname}.{sub.name}", mod.name,
+                                      node.name, sub,
+                                      is_property="property" in
+                                      decorator_names(sub))
+                        ci.methods[sub.name] = fi
+                        self.functions[fi.qualname] = fi
+                self.classes[ci.qualname] = ci
+
+    # ----------------------------------------------------------- resolution
+
+    def resolve_name(self, mod: ModuleInfo, name: str) -> Optional[str]:
+        """Local name -> fully qualified target, if known."""
+        if f"{mod.name}.{name}" in self.functions:
+            return f"{mod.name}.{name}"
+        if f"{mod.name}.{name}" in self.classes:
+            return f"{mod.name}.{name}"
+        return mod.imports.get(name)
+
+    def resolve_call(self, mod: ModuleInfo, cls_name: Optional[str],
+                     call: ast.Call) -> Optional[FuncInfo]:
+        """Resolve a call expression to a FuncInfo when statically possible.
+
+        Handles ``self.m(..)`` (within `cls_name`), module-level names,
+        imported names, and ``module_alias.func(..)``.
+        """
+        fn = call.func
+        if isinstance(fn, ast.Attribute):
+            base = fn.value
+            if isinstance(base, ast.Name) and base.id == "self" and cls_name:
+                ci = self.classes.get(f"{mod.name}.{cls_name}")
+                if ci and fn.attr in ci.methods:
+                    return ci.methods[fn.attr]
+                return None
+            if isinstance(base, ast.Name):
+                target = self.resolve_name(mod, base.id)
+                if target is None:
+                    return None
+                # module alias: dev.mem_energy_pj_per_bit
+                cand = f"{target}.{fn.attr}"
+                if cand in self.functions:
+                    return self.functions[cand]
+                # class attr: Placement.sram (classmethod/constructor)
+                if target in self.classes:
+                    return self.classes[target].methods.get(fn.attr)
+            return None
+        if isinstance(fn, ast.Name):
+            target = self.resolve_name(mod, fn.id)
+            if target and target in self.functions:
+                return self.functions[target]
+            return None
+        return None
+
+    def resolve_class(self, mod: ModuleInfo, name: str) -> \
+            Optional[ClassInfo]:
+        target = self.resolve_name(mod, name)
+        if target and target in self.classes:
+            return self.classes[target]
+        # fall back: unique class with this terminal name
+        hits = [c for q, c in self.classes.items()
+                if q.rsplit(".", 1)[-1] == name]
+        return hits[0] if len(hits) == 1 else None
+
+    # ------------------------------------------------------------ iteration
+
+    def iter_functions(self, module: str) -> Iterator[FuncInfo]:
+        for fi in self.functions.values():
+            if fi.module == module:
+                yield fi
+
+    def rel(self, mod: ModuleInfo) -> str:
+        return mod.rel_path(self.root)
+
+
+def param_names(node: ast.FunctionDef) -> List[str]:
+    args = node.args
+    names = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    names += [a.arg for a in args.kwonlyargs]
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def annotation_tokens(ann: Optional[ast.expr]) -> List[str]:
+    """All bare name tokens appearing in an annotation expression."""
+    if ann is None:
+        return []
+    out: List[str] = []
+    for node in ast.walk(ann):
+        if isinstance(node, ast.Name):
+            out.append(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.append(node.attr)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            # string annotations: crude token split is enough for our use
+            for tok in node.value.replace("[", " ").replace("]", " ") \
+                    .replace(",", " ").replace(".", " ").split():
+                out.append(tok)
+    return out
+
+
+def call_arg_map(call: ast.Call, callee: ast.FunctionDef,
+                 skip_self: bool) -> Dict[str, ast.expr]:
+    """Map callee parameter names -> argument expressions at this call."""
+    params = [a.arg for a in callee.args.args]
+    if skip_self and params and params[0] in ("self", "cls"):
+        params = params[1:]
+    out: Dict[str, ast.expr] = {}
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            break
+        if i < len(params):
+            out[params[i]] = arg
+    for kw in call.keywords:
+        if kw.arg is not None:
+            out[kw.arg] = kw.value
+    return out

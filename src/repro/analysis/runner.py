@@ -1,0 +1,118 @@
+"""Orchestration + CLI for the static-analysis pass.
+
+``run_analysis`` loads the source tree into one :class:`Project` and
+runs the four checkers; ``main`` wraps it with baseline handling:
+
+* default       — print every finding with its baseline status
+* ``--check``   — exit 2 if any finding is not in the baseline
+* ``--write-baseline`` — accept the current findings into the baseline
+  (edit the file afterwards to record per-entry justifications)
+* ``--json``    — machine-readable output
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import ck, fz, po, un
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.project import Project
+
+_SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
+
+
+def _default_roots():
+    """(package_root, repo_root, tests_dir) inferred from this file."""
+    pkg = Path(__file__).resolve().parent.parent        # .../src/repro
+    repo = pkg.parent.parent                            # .../
+    return pkg, repo, repo / "tests"
+
+
+def run_analysis(package_root: Optional[Path] = None,
+                 tests_dir: Optional[Path] = None,
+                 repo_root: Optional[Path] = None) -> List[Finding]:
+    """Run all four checkers over the repro package; sorted findings."""
+    pkg_default, repo_default, tests_default = _default_roots()
+    package_root = package_root or pkg_default
+    repo_root = repo_root or repo_default
+    tests_dir = tests_dir or tests_default
+    proj = Project.load(package_root, "repro", repo_root=repo_root)
+    findings: List[Finding] = []
+    findings += ck.check(proj)
+    findings += un.check(proj)
+    findings += fz.check(proj)
+    findings += po.check(proj, tests_dir)
+    findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity.value, 9),
+                                 f.checker, f.rule, f.path, f.symbol,
+                                 f.fingerprint))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    pkg_default, repo_default, tests_default = _default_roots()
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="Static analysis for the pricing stack "
+                    "(CK cache keys, UN units, FZ frozen axes, "
+                    "PO parity coverage).")
+    ap.add_argument("--root", type=Path, default=pkg_default,
+                    help="package root to analyze (default: src/repro)")
+    ap.add_argument("--tests", type=Path, default=tests_default,
+                    help="tests directory for PO coverage")
+    ap.add_argument("--baseline", type=Path,
+                    default=repo_default / "tools" / "analysis_baseline.json",
+                    help="baseline file of accepted findings")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on any non-baselined finding")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline file")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+
+    findings = run_analysis(package_root=args.root, tests_dir=args.tests,
+                            repo_root=repo_default)
+    baseline = Baseline.load(args.baseline)
+    new, suppressed, stale = baseline.split(findings)
+
+    if args.write_baseline:
+        merged = Baseline.from_findings(
+            findings, justification="TODO: justify or fix")
+        # keep existing justifications for entries that persist
+        for fp, entry in baseline.entries.items():
+            if fp in merged.entries:
+                merged.entries[fp] = entry
+        merged.save(args.baseline)
+        print(f"wrote {len(merged.entries)} entries to {args.baseline}")
+        return 0
+
+    if args.as_json:
+        doc = {"new": [f.to_json() for f in new],
+               "baselined": [f.to_json() for f in suppressed],
+               "stale_baseline": stale}
+        print(json.dumps(doc, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        if suppressed:
+            print(f"-- {len(suppressed)} baselined finding(s) suppressed "
+                  f"({args.baseline.name})")
+        for fp in stale:
+            entry = baseline.entries[fp]
+            print(f"-- stale baseline entry {fp} "
+                  f"({entry.get('checker', '?')}/{entry.get('rule', '?')} "
+                  f"{entry.get('symbol', '')}): no longer reported — "
+                  f"remove it")
+        print(f"{len(new)} new finding(s), {len(suppressed)} baselined, "
+              f"{len(stale)} stale")
+
+    if args.check and new:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -34,7 +34,6 @@ to zero without branches.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 

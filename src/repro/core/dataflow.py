@@ -27,7 +27,6 @@ is register-level hardware that no P0/P1 variant converts to MRAM.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple

@@ -6,7 +6,6 @@ retention/standby powers for the IPS analysis, and EDP.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
@@ -93,8 +92,9 @@ class EnergyReport:
 
 def _read_power_w(level: MemLevel, node: int, clock_hz: float) -> float:
     """Peak continuous read power of the level (all banks streaming)."""
-    e_bit = dev.mem_energy_pj_per_bit(level.tech, level.macro_kb, node, "read")
-    return e_bit * 1e-12 * level.bus_bits * clock_hz
+    e_pj_per_bit = dev.mem_energy_pj_per_bit(level.tech, level.macro_kb,
+                                             node, "read")
+    return e_pj_per_bit * 1e-12 * level.bus_bits * clock_hz
 
 
 def price(accesses: Sequence[LayerAccess], arch: ArchSpec, node: int,

@@ -66,9 +66,9 @@ def weight_memory_power_w(report: EnergyReport, ips: float) -> float:
 def savings_at_ips(nvm_report: EnergyReport, sram_report: EnergyReport,
                    ips: float) -> float:
     """Fractional memory-power savings of an NVM variant vs SRAM-only."""
-    p_s = memory_power_w(sram_report, ips)
-    p_n = memory_power_w(nvm_report, ips)
-    return 1.0 - p_n / p_s
+    p_sram = memory_power_w(sram_report, ips)
+    p_nvm = memory_power_w(nvm_report, ips)
+    return 1.0 - p_nvm / p_sram
 
 
 def crossover_ips(nvm_report: EnergyReport, sram_report: EnergyReport,

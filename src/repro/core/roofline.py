@@ -10,7 +10,6 @@ reduce-scatter / all-to-all / collective-permute).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import re
 from dataclasses import dataclass

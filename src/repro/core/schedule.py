@@ -288,10 +288,10 @@ def reload_energy_j(geom: SystemGeometry,
     all-NVM weight hierarchies therefore charge zero."""
     plan = geom.plan
     _, ew = columns.unit_energy_pj_per_bit(plan)            # (R, L)
-    volatile_w = plan.mask & plan.weight_cls & ~table.nonvolatile
+    volatile_mask = plan.mask & plan.weight_cls & ~table.nonvolatile
     cap_bits = plan.capacity_kb * 1024.0 * 8.0
     resident = np.minimum(geom.weight_bits[:, None], cap_bits)
-    write_pj = (resident * ew * volatile_w).sum(axis=1)
+    write_pj = (resident * ew * volatile_mask).sum(axis=1)
     retained = (plan.weight_cls & table.nonvolatile).any(axis=1)
     stage_pj = np.where(retained, 0.0,
                         geom.weight_bits * dev.WEIGHT_STAGE_PJ_PER_BIT)
@@ -409,7 +409,7 @@ def price(geom: SystemGeometry) -> SystemTable:
     stream_dyn = ips * e_mem_j
     duty = np.bincount(geom.sys_idx, weights=stream_duty, minlength=S)
     dyn = np.bincount(geom.sys_idx, weights=stream_dyn, minlength=S)
-    rate_total = np.bincount(geom.sys_idx, weights=ips, minlength=S)
+    total_ips = np.bincount(geom.sys_idx, weights=ips, minlength=S)
     idle = np.maximum(0.0, 1.0 - duty)
     feasible = duty <= 1.0
 
@@ -420,7 +420,7 @@ def price(geom: SystemGeometry) -> SystemTable:
     first[geom.sys_idx[::-1]] = np.arange(len(geom.sys_idx))[::-1]
     standby = table.standby_w[first]
     wake_j = table.wake_energy_j[first]
-    wake_rate = rate_total * idle
+    wake_rate = total_ips * idle
 
     sw_rate = switch_rate(geom)
     rel_j = reload_energy_j(geom, table)

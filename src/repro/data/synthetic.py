@@ -13,7 +13,6 @@ index — the properties a 1000-node loader actually needs (DESIGN.md §7).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np

@@ -209,7 +209,6 @@ def main():
     p.add_argument("--out", default=None)
     a = p.parse_args()
 
-    cells = []
     archs = LM_ARCHS if (a.all or not a.arch) else [a.arch]
     shapes = list(SHAPES) if (a.all or not a.shape) else [a.shape]
     meshes = [False, True] if a.both_meshes else [a.multi_pod]

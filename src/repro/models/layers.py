@@ -14,7 +14,6 @@ the shape the Pallas kernel (kernels/flash_attention.py) implements on TPU.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Optional, Tuple
 

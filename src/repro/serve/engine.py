@@ -15,7 +15,6 @@ INT8 weight PTQ is optional (TensorRT-style, quant/ptq.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 

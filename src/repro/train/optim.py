@@ -5,7 +5,6 @@ treat it like any other tree; fp32 moments regardless of param dtype.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,0 +1,170 @@
+"""Tests for the ``repro.analysis`` static-analysis framework.
+
+One deliberately-broken fixture module per checker (CK / UN / FZ / PO)
+asserts the checker fires with the expected rule on the expected symbol;
+a hypolite property pins that fingerprints survive reformatting (the
+whole point of hashing unparsed snippets instead of line numbers); and
+the repo itself must run clean modulo the committed baseline.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import ck, fz, po, un
+from repro.analysis.findings import Baseline, Finding, Severity, fingerprint
+from repro.analysis.project import Project
+from repro.analysis.runner import run_analysis
+
+
+def _project(source: str, modname: str = "fix.mod") -> Project:
+    proj = Project()
+    proj.add_module(Path(*modname.split(".")).with_suffix(".py"), modname,
+                    source=textwrap.dedent(source))
+    return proj
+
+
+# --- seeded-bad fixtures, one per checker ----------------------------------
+
+CK_BAD = """
+    from dataclasses import dataclass
+
+    @dataclass(frozen=True)
+    class DesignPoint:
+        arch: str
+        node: int
+
+    class Evaluator:
+        def __init__(self):
+            self._reports = {}
+
+        def report(self, point: DesignPoint):
+            key = (point.arch,)
+            if key not in self._reports:
+                self._reports[key] = point.arch * point.node
+            return self._reports[key]
+"""
+
+UN_BAD = """
+    def total_power(read_pj, leak_w):
+        energy_pj = read_pj + leak_w
+        return energy_pj
+"""
+
+FZ_BAD = """
+    from dataclasses import dataclass
+
+    @dataclass
+    class DesignPoint:
+        arch: str
+        node: int
+"""
+
+PO_BAD = """
+    def covered_fn(x):
+        return x
+
+    def orphan_fn(x):
+        return x
+"""
+
+
+def test_ck_catches_unkeyed_attr():
+    proj = _project(CK_BAD)
+    found = ck.check(proj, modules=("fix.mod",))
+    rules = {(f.rule, f.severity) for f in found}
+    assert ("unkeyed-attr", Severity.ERROR) in rules
+    f = next(f for f in found if f.rule == "unkeyed-attr")
+    assert f.symbol == "Evaluator.report"
+    assert "'node'" in f.message
+    assert f.fingerprint == fingerprint(
+        "CK", "unkeyed-attr", f.path, f.symbol, f.message)
+
+
+def test_un_catches_incompatible_add():
+    proj = _project(UN_BAD)
+    found = un.check(proj, modules=("fix.mod",))
+    assert any(f.rule == "add-mismatch" and f.severity == Severity.ERROR
+               and f.symbol == "total_power" for f in found)
+
+
+def test_fz_catches_unfrozen_axis():
+    proj = _project(FZ_BAD)
+    found = fz.check(proj, axis_classes=("fix.mod.DesignPoint",),
+                     evaluator_classes=())
+    assert [(f.rule, f.symbol) for f in found] == \
+        [("unfrozen-axis", "DesignPoint")]
+
+
+def test_po_catches_uncovered_symbol(tmp_path):
+    proj = _project(PO_BAD)
+    (tmp_path / "test_something.py").write_text(
+        "from fix.mod import covered_fn\n\n"
+        "def test_covered():\n    assert covered_fn(1) == 1\n")
+    found = po.check(proj, tests_dir=tmp_path, module="fix.mod")
+    assert [f.symbol for f in found] == ["orphan_fn"]
+    assert found[0].rule == "uncovered-columnar"
+
+
+# --- fingerprint stability --------------------------------------------------
+
+def _reformat(source: str, blanks: int, comment: str) -> str:
+    """Insert blank lines and a comment — semantics-free reformatting."""
+    lines = textwrap.dedent(source).splitlines()
+    out = [f"# {comment}"]
+    for i, line in enumerate(lines):
+        out.append(line)
+        if i == blanks % max(1, len(lines)):
+            out.extend([""] * (1 + blanks % 3))
+    return "\n".join(out)
+
+
+@settings(max_examples=20)
+@given(blanks=st.integers(min_value=0, max_value=40),
+       comment=st.sampled_from(["x", "reflowed", "NOTE: moved"]))
+def test_fingerprints_stable_under_reformatting(blanks, comment):
+    baseline = {f.fingerprint for f in un.check(_project(UN_BAD),
+                                                modules=("fix.mod",))}
+    assert baseline
+    moved = un.check(_project(_reformat(UN_BAD, blanks, comment)),
+                     modules=("fix.mod",))
+    assert {f.fingerprint for f in moved} == baseline
+    assert all(f.line != 0 for f in moved)   # lines move, prints stay useful
+
+
+def test_fingerprint_ignores_line_numbers():
+    a = Finding("UN", "add-mismatch", Severity.ERROR, "p.py", "f", "m", line=3)
+    b = Finding("UN", "add-mismatch", Severity.ERROR, "p.py", "f", "m", line=9)
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != Finding("CK", "add-mismatch", Severity.ERROR,
+                                    "p.py", "f", "m").fingerprint
+
+
+# --- the repo itself --------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def repo_findings():
+    return run_analysis()
+
+
+def test_repo_clean_modulo_baseline(repo_findings):
+    baseline_path = Path(__file__).parent.parent / "tools" / \
+        "analysis_baseline.json"
+    baseline = Baseline.load(baseline_path)
+    new, _suppressed, stale = baseline.split(repo_findings)
+    assert new == [], "\n".join(f.render() for f in new)
+    assert not stale, f"stale baseline entries: {stale}"
+    # every suppression must carry a real justification, not the stub
+    data = json.loads(baseline_path.read_text())
+    for entry in data["findings"]:
+        assert "TODO" not in entry["justification"]
+
+
+def test_repo_baseline_is_small(repo_findings):
+    """The baseline is for accepted findings, not a dumping ground."""
+    baseline = Baseline.load(Path(__file__).parent.parent / "tools" /
+                             "analysis_baseline.json")
+    assert len(baseline.entries) <= 5

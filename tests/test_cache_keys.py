@@ -1,0 +1,89 @@
+"""Regression tests for the Evaluator cache-key audit (analysis CK).
+
+Pins the two properties the committed ``tools/analysis_baseline.json``
+entries rely on, plus the disjointness of the four key shapes sharing
+the ``_plans`` LRU: ``(pts, False)`` / ``(pts, True)`` from ``plan``
+and ``(spts, "system")`` / ``(spts, "system_area")`` from the system
+plane.
+"""
+import pytest
+
+from repro.configs.base import ConvLayerSpec
+from repro.core.experiment import Evaluator, PAPER_SUITE
+from repro.core.schedule import Stream, SystemPoint
+from repro.core.space import DesignPoint
+
+SPECS = (ConvLayerSpec("k0", "conv", 8, 16, 3, 1, (16, 16)),
+         ConvLayerSpec("k1", "dense", 64, 32, 1, 1, (1, 1)))
+
+
+def test_plan_cache_keys_disjoint():
+    """The four key shapes sharing ``_plans`` never alias each other.
+
+    Node 22 has no paper-default NVM, so the energy plan (default
+    ``stt``) and the area plan (default ``vgsot``) resolve a deferred
+    ``p1`` placement to DIFFERENT devices — a collision would silently
+    price one with the other's technology.
+    """
+    ev = Evaluator()
+    pts = (DesignPoint(SPECS, "eyeriss", 22, "p1"),)
+    spts = (SystemPoint((Stream(SPECS, ips=10.0),), "eyeriss", 22, "p1"),)
+
+    energy_plan = ev.plan(pts)
+    area_plan = ev.plan(pts, for_area=True)
+    ev.system_geometry(spts)
+    ev.system_area_table(spts)
+
+    assert set(ev._plans) == {(pts, False), (pts, True),
+                              (spts, "system"), (spts, "system_area")}
+    assert energy_plan is not area_plan
+    assert "stt" in energy_plan.tech_names[0]
+    assert "vgsot" in area_plan.tech_names[0]
+    # a second round is pure hits — no key ever rebuilds another's slot
+    misses = ev.cache_info()["plan"][1]
+    ev.plan(pts)
+    ev.plan(pts, for_area=True)
+    ev.system_geometry(spts)
+    assert ev.cache_info()["plan"][1] == misses
+
+
+def test_base_arch_sized_arch_intentional_sharing():
+    """base_arch (suite path) and sized_arch memoize the same computation
+    under the same ``(arch, pe_config, w_kb, a_kb)`` key — the sharing the
+    baselined CK key-collision finding accepts as value-safe."""
+    ev = Evaluator()
+    p = DesignPoint("detnet", "eyeriss", 28, "sram")
+    assert p.workload in p.suite          # routes base_arch to variant 1
+    base = ev.base_arch(p)
+    w_kb, a_kb = ev.suite_sizes(p.suite, bits=p.precision())
+    hits = ev.cache_info()["arch"][0]
+    assert ev.sized_arch(p.arch, p.pe_config, w_kb, a_kb) is base
+    assert ev.cache_info()["arch"][0] == hits + 1
+
+
+def test_base_arch_suite_invariant():
+    """base_arch's variant-0 key may omit ``suite``: when the workload is
+    not a named suite member, sizing ignores the suite entirely — the
+    invariant justifying the baselined CK unkeyed-attr finding."""
+    ev = Evaluator()
+    p1 = DesignPoint(SPECS, "eyeriss", 28, "sram", suite=PAPER_SUITE)
+    p2 = DesignPoint(SPECS, "eyeriss", 28, "sram", suite=("detnet",))
+    p3 = DesignPoint(SPECS, "eyeriss", 28, "sram", suite=None)
+    assert ev._sizing(p1) == ev._sizing(p2) == ev._sizing(p3) == (None, None)
+    assert ev.base_arch(p1) is ev.base_arch(p2) is ev.base_arch(p3)
+    # fresh evaluators agree too — the shared cache slot hides no drift
+    assert Evaluator().base_arch(p1) == Evaluator().base_arch(p3)
+
+
+def test_string_suite_member_still_keys_on_suite():
+    """The complement: when the workload IS in the suite, different suites
+    produce different sizings and must land in different cache slots."""
+    ev = Evaluator()
+    p_full = DesignPoint("detnet", "eyeriss", 28, "sram", suite=PAPER_SUITE)
+    p_solo = DesignPoint("detnet", "eyeriss", 28, "sram", suite=("detnet",))
+    full = ev.base_arch(p_full)
+    solo = ev.base_arch(p_solo)
+    if ev._sizing(p_full) == ev._sizing(p_solo):
+        pytest.skip("suite max degenerate for this workload set")
+    assert full is not solo
+    assert full != solo

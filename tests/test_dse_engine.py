@@ -1,8 +1,6 @@
 """DSE-plane tests: mapper invariants, energy/area/IPS mechanics, and the
 paper's qualitative claims (sign checks for Fig 2e/2f/3d, Tables 2-3)."""
-import math
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ConvLayerSpec

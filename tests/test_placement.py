@@ -3,9 +3,7 @@ shim byte-parity across every registered paper space, lattice enumeration
 properties (hypolite), the placement sweep's hybrid-dominance claim, and
 the get_arch ignored-kwarg asymmetry."""
 import math
-import warnings
 
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -4,7 +4,6 @@ satellites: hypolite properties (single-stream parity with the existing
 monotonicity), the SWEEPS["system"] acceptance claim, the
 wake-per-gating-event fix, the ``sram_pairs`` unmatched-baseline error and
 the roofline sub-byte/fp8 dtype parsing."""
-import math
 
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Serving-engine tests: continuous batching correctness incl. SSM state."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_smoke

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.train import checkpoint as ckpt
@@ -121,7 +120,6 @@ def test_compress_error_feedback_unbiased():
         q, s, err = compress.compress(g, err)
         total_sent += np.asarray(compress.decompress(q, s)["g"])
     # residual bounded by one final quantization error
-    resid = np.abs(total_true - total_sent - (-np.asarray(err["g"])))
     assert np.max(np.abs(total_true - (total_sent + np.asarray(err["g"])))) < 1e-4
 
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Static-analysis gate for the pricing stack.
+
+    python tools/analyze.py            # report findings
+    python tools/analyze.py --check    # CI gate: fail on new findings
+    python tools/analyze.py --write-baseline   # accept current findings
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis``. See
+DESIGN.md §8 for checker semantics and how to baseline a finding.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.runner import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

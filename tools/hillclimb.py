@@ -281,7 +281,7 @@ def roofline_main(a):
 
     R_full = lm_mod.num_repeats(cfg)
     t0 = time.monotonic()
-    compiled = dryrun._compile_cell(cfg, a.shape, mesh, rules)
+    dryrun._compile_cell(cfg, a.shape, mesh, rules)  # full-config check
     c1 = dryrun._costs(dryrun._compile_cell(
         dryrun._scaled_cfg(cfg, 1, enc_layers=1), a.shape, mesh, rules))
     c2c = dryrun._compile_cell(dryrun._scaled_cfg(cfg, 2, enc_layers=1),
