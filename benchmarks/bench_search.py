@@ -1,0 +1,230 @@
+"""Streaming search throughput + constant-memory gate (repro.search).
+
+Measures the chunked columnar lattice pricer end-to-end and proves the
+constant-memory claim: the SAME joint lattice axes at two sizes (the
+placement axis scaled 16x) are streamed to a Pareto frontier in separate
+probe subprocesses, and peak RSS must not grow with point count — that is
+what "streaming" means here. Alongside:
+
+  * designs/sec — cold (first pass: numpy warmup + traffic-group caches)
+    and steady-state (second pass over the already-compiled pricer). The
+    steady-state number on the dev machine is the paper's headline
+    (>= 1M designs/sec on the 10^6-point joint lattice).
+  * one-shot comparison — the same sub-lattice through eager
+    ``evaluate_table`` (per-point plan assembly): the per-design speedup
+    of the compiled stream is the machine-independent ratio ``--check``
+    gates (floor = baseline / 2).
+  * evolve cost — ms per generation of the 10-generation NSGA-II fleet,
+    gated per PRICED design against the one-shot per-design cost.
+
+    PYTHONPATH=src python benchmarks/bench_search.py [--small 16]
+        [--large 256] [--chunk 65536]
+        [--check benchmarks/baseline_search.json]
+        [--write-baseline benchmarks/baseline_search.json]
+
+Ratios are machine-independent (absolute rates are recorded for
+reference); the committed baseline is recorded with the exact CI
+invocation. RSS probes re-invoke this file with ``--rss-probe N`` so each
+size gets a fresh address space (ru_maxrss is monotonic in-process).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+PRECISION_AXES = dict(
+    weight_bits=(None, 8, 6, 4, 2),
+    act_bits=(None, 8, 6, 4, 2),
+    psum_bits=(None, 16, 20, 24, 28, 32, 40, 48),
+)
+
+
+def build_lattice(n_placements: int):
+    """The joint lattice of the paper's axes: 4,000 points per placement
+    (2 workloads x 2 pe x 5x5x8 precision x 5 nodes)."""
+    from repro.core.experiment import PLACEMENT_TECHS
+    from repro.core.placement import Placement
+    from repro.core.space import DesignSpace
+
+    placements = Placement.enumerate("simba", PLACEMENT_TECHS)
+    assert len(placements) >= n_placements
+    return DesignSpace.product_iter(
+        "joint", workload=("detnet", "edsnet"), arch="simba",
+        pe_config=("v1", "v2"), **PRECISION_AXES, node=(45, 40, 28, 22, 7),
+        placement=tuple(placements[:n_placements]))
+
+
+def probe(n_placements: int, chunk: int) -> dict:
+    """One streaming pass in THIS process: compile, stream twice (cold +
+    steady), report rates, frontier size and peak RSS."""
+    from repro.core.experiment import Evaluator
+    from repro.search.stream import LatticePricer, stream_frontier
+
+    ev = Evaluator()
+    space = build_lattice(n_placements)
+    n = len(space)
+    t0 = time.monotonic()
+    pricer = LatticePricer(ev, space)
+    t1 = time.monotonic()
+    arc = stream_frontier(ev, pricer, objectives=("edp", "pmem"), ips=10.0,
+                          chunk_size=chunk, min_ips=10.0)
+    t2 = time.monotonic()
+    steady = []
+    for _ in range(2):                  # best-of-2 (noise suppression)
+        t = time.monotonic()
+        arc2 = stream_frontier(ev, pricer, objectives=("edp", "pmem"),
+                               ips=10.0, chunk_size=chunk, min_ips=10.0)
+        steady.append(time.monotonic() - t)
+        assert len(arc) == len(arc2)
+    return dict(
+        points=n, chunk=chunk, frontier=len(arc),
+        compile_s=t1 - t0,
+        cold_s=t2 - t1, cold_mps=n / (t2 - t1) / 1e6,
+        steady_s=min(steady), steady_mps=n / min(steady) / 1e6,
+        peak_rss_kb=resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+    )
+
+
+def probe_subprocess(n_placements: int, chunk: int) -> dict:
+    """Run ``probe`` in a fresh interpreter so each size sees its own peak
+    RSS (ru_maxrss never decreases within a process)."""
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--rss-probe", str(n_placements), "--chunk", str(chunk)],
+        capture_output=True, text=True, check=True,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def measure(small: int, large: int, chunk: int) -> dict:
+    from repro.core.experiment import Evaluator
+    from repro.search.evolve import evolve
+
+    p_small = probe_subprocess(small, chunk)
+    p_large = probe_subprocess(large, chunk)
+
+    # one-shot reference: the small lattice eagerly materialized through
+    # evaluate_table (per-point plan assembly) — the path the compiled
+    # stream replaces
+    ev = Evaluator()
+    space = build_lattice(small)
+    t0 = time.monotonic()
+    pts = list(space)
+    table = ev.evaluate_table(pts)
+    oneshot_s = time.monotonic() - t0
+    assert len(table) == p_small["points"]
+
+    # population optimizer: 10 generations, one columnar pass each
+    ev2 = Evaluator()
+    t0 = time.monotonic()
+    res = evolve(ev2, workload="detnet", objectives=("pmem",), ips=10.0,
+                 generations=10, population=24, seed=0)
+    evolve_s = time.monotonic() - t0
+
+    per_design_stream = p_small["steady_s"] / p_small["points"]
+    per_design_oneshot = oneshot_s / p_small["points"]
+    per_design_evolve = evolve_s / res.n_evaluated
+    return dict(
+        small=p_small, large=p_large,
+        oneshot_points=p_small["points"], oneshot_s=oneshot_s,
+        evolve_generations=res.generations, evolve_priced=res.n_evaluated,
+        evolve_ms_per_gen=evolve_s / res.generations * 1e3,
+        # machine-independent gates
+        rss_ratio_large_vs_small=(p_large["peak_rss_kb"]
+                                  / p_small["peak_rss_kb"]),
+        speedup_stream_vs_oneshot=per_design_oneshot / per_design_stream,
+        ratio_evolve_vs_oneshot_per_design=(per_design_evolve
+                                            / per_design_oneshot),
+    )
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--small", type=int, default=16,
+                   help="placements on the small lattice (x4000 points)")
+    p.add_argument("--large", type=int, default=256,
+                   help="placements on the large lattice (x4000 points)")
+    p.add_argument("--chunk", type=int, default=65536,
+                   help="designs per columnar pass")
+    p.add_argument("--rss-probe", type=int, metavar="N_PLACEMENTS",
+                   help=argparse.SUPPRESS)  # internal: subprocess mode
+    p.add_argument("--check", metavar="BASELINE_JSON",
+                   help="fail on regression vs the committed baseline")
+    p.add_argument("--write-baseline", metavar="BASELINE_JSON",
+                   help="record this run as the committed baseline")
+    a = p.parse_args()
+
+    if a.rss_probe is not None:
+        print(json.dumps(probe(a.rss_probe, a.chunk)))
+        return
+
+    m = measure(a.small, a.large, a.chunk)
+    for tag in ("small", "large"):
+        r = m[tag]
+        print(f"{tag}: {r['points']:>9,} points  "
+              f"compile {r['compile_s']:.2f}s  "
+              f"cold {r['cold_mps']:.2f}M/s  "
+              f"steady {r['steady_mps']:.2f}M/s  "
+              f"frontier {r['frontier']}  "
+              f"peak RSS {r['peak_rss_kb'] / 1024:.0f} MB")
+    print(f"peak-RSS ratio large/small: {m['rss_ratio_large_vs_small']:.2f} "
+          f"({m['large']['points'] / m['small']['points']:.0f}x the points)")
+    print(f"one-shot evaluate_table:    {m['oneshot_s']:.2f}s for "
+          f"{m['oneshot_points']:,} points -> streamed is "
+          f"{m['speedup_stream_vs_oneshot']:.0f}x per design")
+    print(f"evolve: {m['evolve_generations']} generations, "
+          f"{m['evolve_priced']} designs priced, "
+          f"{m['evolve_ms_per_gen']:.1f} ms/gen "
+          f"({m['ratio_evolve_vs_oneshot_per_design']:.1f}x one-shot "
+          f"per-design cost)")
+
+    if a.write_baseline:
+        with open(a.write_baseline, "w") as f:
+            json.dump(m, f, indent=1)
+        print(f"baseline written to {a.write_baseline}")
+    if a.check:
+        with open(a.check) as f:
+            base = json.load(f)
+        failed = False
+        # constant memory: peak RSS must not scale with point count. The
+        # ceiling leaves room for allocator noise, not for O(n) growth
+        # (16x the points would blow straight through it).
+        ceil_r = max(base["rss_ratio_large_vs_small"], 1.0) * 1.5
+        got_r = m["rss_ratio_large_vs_small"]
+        print(f"check: peak-RSS ratio {got_r:.2f} "
+              f"(baseline {base['rss_ratio_large_vs_small']:.2f}, "
+              f"ceiling {ceil_r:.2f})")
+        if got_r > ceil_r:
+            print("FAIL: peak RSS grows with lattice size (not streaming)")
+            failed = True
+        floor_s = base["speedup_stream_vs_oneshot"] / 2.0
+        got_s = m["speedup_stream_vs_oneshot"]
+        print(f"check: stream-vs-oneshot per-design speedup {got_s:.0f}x "
+              f"(baseline {base['speedup_stream_vs_oneshot']:.0f}x, "
+              f"floor {floor_s:.0f}x)")
+        if got_s < floor_s:
+            print("FAIL: >2x regression of the compiled-stream speedup")
+            failed = True
+        ceil_e = max(base["ratio_evolve_vs_oneshot_per_design"], 1.0) * 2.0
+        got_e = m["ratio_evolve_vs_oneshot_per_design"]
+        print(f"check: evolve per-priced-design cost ratio {got_e:.1f} "
+              f"(baseline {base['ratio_evolve_vs_oneshot_per_design']:.1f}, "
+              f"ceiling {ceil_e:.1f})")
+        if got_e > ceil_e:
+            print("FAIL: >2x regression of the per-generation evolve cost")
+            failed = True
+        if failed:
+            sys.exit(1)
+        print("OK")
+
+
+if __name__ == "__main__":
+    main()

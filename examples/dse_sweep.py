@@ -155,3 +155,26 @@ for p, r in front:
 info = ev.cache_info()
 print("\nevaluator cache (hits, misses): " +
       ", ".join(f"{k}={v}" for k, v in info.items()))
+
+# Streaming joint-space frontier (repro.search): the placement x precision
+# x pe x node lattice for one arch is ~10^5-10^6 points — describe it
+# lazily, stream it through the chunked columnar pricer, and keep only the
+# (EDP, P_mem@10ips) Pareto archive. Survivors materialize via point_at.
+from repro.core.experiment import PLACEMENT_TECHS
+from repro.core.placement import Placement
+from repro.core.space import DesignSpace
+from repro.search import stream_frontier
+
+joint = DesignSpace.product_iter(
+    "joint", workload="detnet", arch="eyeriss", pe_config=("v1", "v2"),
+    weight_bits=(None, 8, 4), act_bits=(None, 8, 4), node=(45, 28, 7),
+    placement=Placement.enumerate("eyeriss", PLACEMENT_TECHS))
+arc = stream_frontier(ev, joint, objectives=("edp", "pmem"), ips=10.0,
+                      min_ips=10.0)
+print(f"\n=== streaming frontier: {len(joint):,}-point joint lattice -> "
+      f"{len(arc)} designs ({arc.dropped:,} infeasible) ===")
+for i, (edp, pmem) in zip(*arc.frontier()):
+    p = joint.point_at(int(i))
+    print(f"  {p.arch:8s} {p.node:2d}nm {p.variant:<44s} "
+          f"{p.precision_label:5s} edp={edp:.2e} J*s  "
+          f"P_mem={pmem*1e6:.1f} uW")

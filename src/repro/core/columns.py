@@ -277,6 +277,40 @@ class PricingPlan:
         return len(self.points)
 
 
+def group_geometry(groups: Sequence[TrafficTable]) -> Dict[str, np.ndarray]:
+    """Per-GROUP geometry padded to the widest arch in ``groups`` — the
+    (G, Lmax) half of plan assembly, shared by ``build_plan`` and the
+    streaming lattice pricer (``repro.search.stream``), which gathers these
+    rows per chunk instead of re-deriving them per point."""
+    G = len(groups)
+    Lmax = max((t.num_levels for t in groups), default=0)
+
+    def pad(values_per_group, fill, dtype=float):
+        out = np.full((G, Lmax), fill, dtype=dtype)
+        for g, vals in enumerate(values_per_group):
+            out[g, :len(vals)] = vals
+        return out
+
+    return dict(
+        mask=pad([[True] * t.num_levels for t in groups], False, bool),
+        names=pad([t.level_names for t in groups], "", object),
+        cls=pad([t.level_cls for t in groups], "", object),
+        macro=pad([t.macro_kb for t in groups], 1.0),
+        cap=pad([t.capacity_kb for t in groups], 0.0),
+        bus=pad([t.bus_bits for t in groups], 1.0),
+        count=pad([t.count for t in groups], 0.0),
+        read=pad([t.total_read_bits for t in groups], 0.0),
+        write=pad([t.total_write_bits for t in groups], 0.0),
+        tech=pad([[l.tech for l in t.arch.levels] for t in groups],
+                 "sram", object),
+        is_cpu=np.array([t.arch.dataflow == "sequential" for t in groups]),
+        pes=np.array([float(t.arch.num_pes) for t in groups]),
+        macs=np.array([float(t.total_macs) for t in groups]),
+        dmacs=np.array([float(t.total_delivery_macs) for t in groups]),
+        cycles=np.array([t.total_compute_cycles for t in groups]),
+        Lmax=Lmax)
+
+
 def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
                points: Sequence[Any], nvms: Sequence[str]) -> PricingPlan:
     """Flatten mapped traffic groups + point coordinates into one plan.
@@ -290,31 +324,13 @@ def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
     """
     groups = tuple(groups)
     gidx = np.asarray(gidx, int)
-    P, G = len(points), len(groups)
-    Lmax = max((t.num_levels for t in groups), default=0)
-
-    def pad(values_per_group, fill, dtype=float):
-        out = np.full((G, Lmax), fill, dtype=dtype)
-        for g, vals in enumerate(values_per_group):
-            out[g, :len(vals)] = vals
-        return out
-
-    g_mask = pad([[True] * t.num_levels for t in groups], False, bool)
-    g_names = pad([t.level_names for t in groups], "", object)
-    g_cls = pad([t.level_cls for t in groups], "", object)
-    g_macro = pad([t.macro_kb for t in groups], 1.0)
-    g_cap = pad([t.capacity_kb for t in groups], 0.0)
-    g_bus = pad([t.bus_bits for t in groups], 1.0)
-    g_count = pad([t.count for t in groups], 0.0)
-    g_read = pad([t.total_read_bits for t in groups], 0.0)
-    g_write = pad([t.total_write_bits for t in groups], 0.0)
-    g_tech = pad([[l.tech for l in t.arch.levels] for t in groups],
-                 "sram", object)
-    g_is_cpu = np.array([t.arch.dataflow == "sequential" for t in groups])
-    g_pes = np.array([float(t.arch.num_pes) for t in groups])
-    g_macs = np.array([float(t.total_macs) for t in groups])
-    g_dmacs = np.array([float(t.total_delivery_macs) for t in groups])
-    g_cycles = np.array([t.total_compute_cycles for t in groups])
+    P = len(points)
+    g = group_geometry(groups)
+    g_mask, g_names, g_cls = g["mask"], g["names"], g["cls"]
+    g_macro, g_cap, g_bus = g["macro"], g["cap"], g["bus"]
+    g_count, g_read, g_write = g["count"], g["read"], g["write"]
+    g_tech, g_is_cpu, g_pes = g["tech"], g["is_cpu"], g["pes"]
+    g_macs, g_dmacs, g_cycles = g["macs"], g["dmacs"], g["cycles"]
 
     nodes = tuple(p.node for p in points)
     node_list, node_idx = np.unique(np.array(nodes, int),

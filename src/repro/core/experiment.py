@@ -341,6 +341,19 @@ class Evaluator:
         """Columnar area evaluation of the whole space (one numpy pass)."""
         return columns.area(self.plan(points, for_area=True))
 
+    def evaluate_stream(self, space, chunk_size: int = 65536,
+                        with_area: bool = False):
+        """Chunked columnar evaluation: yield ``StreamChunk``s of <=
+        ``chunk_size`` points each, every chunk priced as ONE
+        ``EnergyTable`` (and optionally ``AreaTable``) pass with the
+        structural caches shared across chunks — peak memory is O(chunk)
+        while ``space`` may be a 10^6+-point ``LazySpace``
+        (``DesignSpace.product_iter``). Chunked output is byte-identical
+        to the one-shot ``evaluate_table``; see ``repro.search.stream``."""
+        from repro.search.stream import evaluate_stream
+        return evaluate_stream(self, space, chunk_size=chunk_size,
+                               with_area=with_area)
+
     def evaluate(self, points: Iterable[DesignPoint],
                  batched: bool = True) -> "ResultSet":
         """Evaluate a space; with ``batched`` (default) the whole space is

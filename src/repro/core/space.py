@@ -218,6 +218,36 @@ def _as_axis(values: Any) -> Tuple[Any, ...]:
         return (values,)
 
 
+def product_kwargs(norm: Dict[str, Tuple[Any, ...]],
+                   combo: Sequence[Any]) -> Dict[str, Any]:
+    """Merge one axis-value combination into ``DesignPoint`` kwargs
+    (``Bind`` values contribute all their bound fields). Shared between the
+    eager ``DesignSpace.product`` and the lazy row-major iterators
+    (``repro.search.lazy``), so both resolve clashes identically."""
+    kw: Dict[str, Any] = {}
+    for axis_name, value in zip(norm, combo):
+        fields = value.fields if isinstance(value, Bind) \
+            else {axis_name: value}
+        clash = set(fields) & set(kw)
+        if clash:
+            raise TypeError(
+                f"axis {axis_name!r} sets fields {sorted(clash)} "
+                f"already bound by an earlier axis")
+        kw.update(fields)
+    return kw
+
+
+def check_axes(norm: Dict[str, Tuple[Any, ...]]) -> None:
+    """Validate normalized product axes: names must be DesignPoint fields
+    unless every value on the axis is a ``Bind``."""
+    for k, vals in norm.items():
+        if k not in _POINT_FIELDS and not all(
+                isinstance(v, Bind) for v in vals):
+            raise TypeError(
+                f"axis {k!r} is not a DesignPoint field; non-field axes "
+                f"must contain only Bind values")
+
+
 class DesignSpace:
     """Ordered, de-duplicated collection of ``DesignPoint``s with named axes."""
 
@@ -232,6 +262,9 @@ class DesignSpace:
                 seen.add(p)
                 uniq.append(p)
         self._points: Tuple[DesignPoint, ...] = tuple(uniq)
+        # the membership set is built once here (the points are immutable);
+        # __contains__ must never rebuild it per query
+        self._point_set: frozenset = frozenset(seen)
         self.name = name
         self.axes: Dict[str, Tuple[Any, ...]] = dict(axes or {})
 
@@ -245,26 +278,22 @@ class DesignSpace:
         Scalar axis values (strings, ints, configs) are auto-wrapped.
         """
         norm = {k: _as_axis(v) for k, v in axes.items()}
-        for k, vals in norm.items():
-            if k not in _POINT_FIELDS and not all(
-                    isinstance(v, Bind) for v in vals):
-                raise TypeError(
-                    f"axis {k!r} is not a DesignPoint field; non-field axes "
-                    f"must contain only Bind values")
-        points = []
-        for combo in itertools.product(*norm.values()):
-            kw: Dict[str, Any] = {}
-            for axis_name, value in zip(norm, combo):
-                fields = value.fields if isinstance(value, Bind) \
-                    else {axis_name: value}
-                clash = set(fields) & set(kw)
-                if clash:
-                    raise TypeError(
-                        f"axis {axis_name!r} sets fields {sorted(clash)} "
-                        f"already bound by an earlier axis")
-                kw.update(fields)
-            points.append(DesignPoint(**kw))
+        check_axes(norm)
+        points = [DesignPoint(**product_kwargs(norm, combo))
+                  for combo in itertools.product(*norm.values())]
         return cls(points, name=name, axes=norm)
+
+    @classmethod
+    def product_iter(cls, name: str = "space", **axes: Any) -> "Any":
+        """Lazy counterpart of ``product``: a generator-backed
+        ``repro.search.lazy.LazySpace`` that yields the SAME points in the
+        SAME row-major order without ever materializing the cross product
+        (no de-duplication — aliased axes yield their duplicates). Compose
+        with ``where``/``map``, slice into bounded sub-spaces with
+        ``chunks(n)``, or stream it through
+        ``Evaluator.evaluate_stream``."""
+        from repro.search.lazy import LazySpace
+        return LazySpace(name, axes)
 
     @classmethod
     def from_points(cls, points: Iterable[DesignPoint],
@@ -277,11 +306,19 @@ class DesignSpace:
         return DesignSpace(pts, name=self.name, axes=self.axes)
 
     def map(self, fn: Callable[[DesignPoint], DesignPoint]) -> "DesignSpace":
-        return DesignSpace([fn(p) for p in self._points], name=self.name)
+        # axes metadata survives map exactly like it survives where: the
+        # DECLARED values stay queryable via axis() even when fn rewrites
+        # point fields (field-name axes always reflect the actual points)
+        return DesignSpace([fn(p) for p in self._points], name=self.name,
+                           axes=self.axes)
 
     def __add__(self, other: "DesignSpace") -> "DesignSpace":
+        merged = dict(self.axes)
+        for k, vals in getattr(other, "axes", {}).items():
+            have = merged.get(k, ())
+            merged[k] = have + tuple(v for v in vals if v not in have)
         return DesignSpace(self._points + tuple(other),
-                           name=f"{self.name}+{other.name}")
+                           name=f"{self.name}+{other.name}", axes=merged)
 
     # --- container protocol -------------------------------------------------
     def __iter__(self) -> Iterator[DesignPoint]:
@@ -294,7 +331,7 @@ class DesignSpace:
         return self._points[i]
 
     def __contains__(self, p: DesignPoint) -> bool:
-        return p in set(self._points)
+        return p in self._point_set
 
     def __repr__(self):
         ax = ", ".join(f"{k}[{len(v)}]" for k, v in self.axes.items())

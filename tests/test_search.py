@@ -1,0 +1,353 @@
+"""Streaming joint-space search tests (repro.search).
+
+Three contracts pinned here:
+
+  * PARITY — chunked columnar pricing (``evaluate_stream``, both the
+    generic and the compiled lattice path) is byte-identical to one-shot
+    ``evaluate_table``/``area_table`` at every chunk size, and the
+    streaming ``ParetoArchive`` equals the ``ResultSet.pareto`` oracle on
+    random objective columns, ties included.
+  * LAZY SPACES — ``DesignSpace.product_iter`` yields the eager product's
+    points in the same row-major order, with exact ``len``/``point_at``/
+    ``chunks`` and composable ``where``/``map``; axes metadata survives
+    ``map``/``where``/``+`` on the eager space too.
+  * OPTIMIZER — ``evolve`` embeds the incumbent's full neighborhood each
+    generation, so within the same budget its best is never worse than
+    the greedy walker's (the ``hillclimb --dse`` acceptance bar).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.experiment import PLACEMENT_TECHS, Evaluator, ResultSet
+from repro.core.placement import Placement
+from repro.core.space import Bind, DesignPoint, DesignSpace
+from repro.search import (LazySpace, ParetoArchive, chunk_objectives,
+                          dominated_by, evaluate_stream, evolve, greedy,
+                          pareto_mask, stream_frontier)
+from repro.search.evolve import crowded_select, pareto_ranks
+from repro.search.stream import LatticePricer
+
+
+@pytest.fixture(scope="module")
+def ev():
+    return Evaluator()
+
+
+@pytest.fixture(scope="module")
+def placement_lattice():
+    """The 256-point simba placement lattice (4 techs ^ 4 levels) as a lazy
+    product with precision/node structure around it kept minimal."""
+    placements = Placement.enumerate("simba", PLACEMENT_TECHS)
+    assert len(placements) == 256
+    return DesignSpace.product_iter(
+        "placements", workload="detnet", arch="simba", node=7,
+        placement=placements)
+
+
+# ---------------------------------------------------------------------------
+# lazy spaces
+# ---------------------------------------------------------------------------
+
+def test_lazy_matches_eager_product_order():
+    axes = dict(workload=("detnet", "edsnet"), arch="eyeriss",
+                node=(45, 7), variant=("sram", "p1"))
+    lazy = DesignSpace.product_iter("s", **axes)
+    eager = DesignSpace.product("s", **axes)
+    assert isinstance(lazy, LazySpace)
+    assert lazy.shape == (2, 1, 2, 2)
+    assert len(lazy) == len(eager) == 8
+    assert list(lazy) == list(eager)
+    # O(1) random access agrees positionally with iteration
+    for i in range(len(lazy)):
+        assert lazy.point_at(i) == eager[i]
+    assert lazy.point_at(-1) == eager[-1]
+    with pytest.raises(IndexError):
+        lazy.point_at(len(lazy))
+
+
+def test_lazy_bind_axes_and_chunks():
+    lazy = DesignSpace.product_iter(
+        "corners", workload="detnet", arch="simba",
+        corner=(Bind(node=28, nvm="stt"), Bind(node=7, nvm="vgsot")),
+        variant=("p0", "p1"))
+    pts = list(lazy)
+    assert len(pts) == len(lazy) == 4
+    assert {(p.node, p.nvm) for p in pts} == {(28, "stt"), (7, "vgsot")}
+    # chunks: bounded eager sub-spaces covering the stream exactly
+    subs = list(lazy.chunks(3))
+    assert [len(s) for s in subs] == [3, 1]
+    assert [p for s in subs for p in s] == pts
+    assert subs[0].axis("corner") == lazy.axes["corner"]
+
+
+def test_lazy_where_map_compose():
+    lazy = DesignSpace.product_iter(
+        "s", workload="detnet", arch="eyeriss", node=(45, 28, 7),
+        variant=("sram", "p1"))
+    filt = lazy.where(lambda p: p.node != 28)
+    assert filt.is_filtered and not filt.is_product
+    assert [p.node for p in filt] == [45, 45, 7, 7]
+    with pytest.raises(TypeError):
+        len(filt)
+    with pytest.raises(TypeError):
+        filt.point_at(0)
+    mapped = lazy.map(lambda p: p.with_(pe_config="v1"))
+    assert not mapped.is_filtered and not mapped.is_product
+    assert len(mapped) == 6
+    assert all(p.pe_config == "v1" for p in mapped)
+    assert mapped.point_at(0).pe_config == "v1"
+    m = filt.materialize()
+    assert isinstance(m, DesignSpace) and len(m) == 4
+    assert m.axis("variant") == ("sram", "p1")
+
+
+def test_contains_does_not_rebuild_membership_set(monkeypatch):
+    """Regression: ``__contains__`` used to rebuild ``set(self._points)``
+    per query — O(n) hashes per probe. The membership set is built once in
+    ``__init__``; each probe must hash only the probe point."""
+    space = DesignSpace.product(
+        "s", workload="detnet", arch="eyeriss", node=(45, 40, 28, 22, 7),
+        variant=("sram", "p0", "p1"))
+    assert len(space) == 15
+    calls = {"n": 0}
+    orig = DesignPoint.__hash__
+
+    def counting_hash(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(DesignPoint, "__hash__", counting_hash)
+    probe_in = space[7]
+    probe_out = DesignPoint(workload="edsnet", arch="cpu", node=45)
+    for _ in range(50):
+        assert probe_in in space
+        assert probe_out not in space
+    # 100 probes -> ~1 hash each; the old rebuild cost >= 15 per probe
+    assert calls["n"] <= 200
+
+
+def test_axes_metadata_survives_map_where_add():
+    a = DesignSpace.product("a", workload="detnet", arch="eyeriss",
+                            node=(45, 28))
+    b = DesignSpace.product("b", workload="detnet", arch="simba",
+                            node=(28, 7))
+    mapped = a.map(lambda p: p.with_(pe_config="v1"))
+    assert mapped.axes == a.axes
+    assert mapped.axis("node") == (45, 28)
+    filtered = a.where(lambda p: p.node == 45)
+    assert filtered.axes == a.axes
+    merged = a + b
+    assert merged.axis("arch") == ("eyeriss", "simba")
+    assert merged.axis("node") == (45, 28, 7)
+
+
+# ---------------------------------------------------------------------------
+# streaming parity: chunked == one-shot, byte for byte
+# ---------------------------------------------------------------------------
+
+def _assert_stream_parity(ev, space, points, chunk_size):
+    one = ev.evaluate_table(points)
+    at = ev.area_table(points)
+    off = 0
+    for ch in evaluate_stream(ev, space, chunk_size=chunk_size,
+                              with_area=True):
+        s = slice(off, off + len(ch))
+        assert np.array_equal(ch.energy.total_pj, one.total_pj[s])
+        assert np.array_equal(ch.energy.latency_s, one.latency_s[s])
+        assert np.array_equal(ch.energy.edp, one.edp[s])
+        assert np.array_equal(ch.energy.memory_power_at(10.0),
+                              one.memory_power_at(10.0)[s])
+        assert np.array_equal(ch.area.total_mm2, at.total_mm2[s])
+        # the objective matrix reuses shared intermediates — still bitwise
+        obj = chunk_objectives(
+            ch, ("energy", "latency", "edp", "pmem", "area"), ips=10.0)
+        assert np.array_equal(obj[:, 0], one.total_pj[s])
+        assert np.array_equal(obj[:, 2], one.edp[s])
+        assert np.array_equal(obj[:, 3], one.memory_power_at(10.0)[s])
+        assert np.array_equal(obj[:, 4], at.total_mm2[s])
+        off += len(ch)
+    assert off == len(points)
+
+
+@pytest.mark.parametrize("chunk_size", [1, 7, 256])
+def test_stream_parity_compiled_path(ev, placement_lattice, chunk_size):
+    """Compiled lattice pricer vs one-shot tables on the 256-point
+    placement lattice, chunk sizes {1, 7, all}."""
+    points = list(placement_lattice)
+    _assert_stream_parity(ev, placement_lattice, points, chunk_size)
+
+
+@pytest.mark.parametrize("chunk_size", [7, 64])
+def test_stream_parity_generic_path(ev, chunk_size):
+    """The buffering path (eager DesignSpace input) prices through
+    ``assemble_plan`` — same bytes as one-shot."""
+    space = DesignSpace.product(
+        "mixed", workload="detnet", arch=("cpu", "eyeriss", "simba"),
+        node=(45, 7), variant=("sram", "p0", "p1"))
+    _assert_stream_parity(ev, space, list(space), chunk_size)
+
+
+def test_stream_compiled_equals_generic(ev, placement_lattice):
+    """The two paths agree with each other (lazy lattice vs the same
+    points fed as an eager iterable)."""
+    eager = placement_lattice.materialize()
+    for fast, slow in zip(evaluate_stream(ev, placement_lattice, 64),
+                          evaluate_stream(ev, eager, 64)):
+        assert np.array_equal(fast.energy.total_pj, slow.energy.total_pj)
+        assert np.array_equal(fast.energy.latency_s, slow.energy.latency_s)
+
+
+def test_group_geometry_pads_to_widest_arch(ev):
+    """``columns.group_geometry`` (the (G, Lmax) half of plan assembly the
+    lattice pricer gathers from) matches each group's own levels, padded
+    with pricing-neutral fill (mask False, macro 1.0, traffic 0.0)."""
+    from repro.core import columns
+
+    pts = [DesignPoint(workload="detnet", arch=a, node=7)
+           for a in ("cpu", "simba")]
+    groups = [ev.traffic(p, ev.base_arch(p)) for p in pts]
+    g = columns.group_geometry(groups)
+    assert g["Lmax"] == max(t.num_levels for t in groups)
+    for gi, t in enumerate(groups):
+        L = t.num_levels
+        assert g["mask"][gi, :L].all() and not g["mask"][gi, L:].any()
+        assert list(g["names"][gi, :L]) == list(t.level_names)
+        assert np.array_equal(g["macro"][gi, :L], t.macro_kb)
+        assert np.array_equal(g["read"][gi, :L], t.total_read_bits)
+        assert (g["macro"][gi, L:] == 1.0).all()
+        assert (g["read"][gi, L:] == 0.0).all()
+        assert g["is_cpu"][gi] == (t.arch.dataflow == "sequential")
+
+
+def test_pricer_rejects_filtered_space():
+    lazy = DesignSpace.product_iter(
+        "s", workload="detnet", arch="simba", node=(45, 7))
+    with pytest.raises(TypeError):
+        LatticePricer(Evaluator(), lazy.where(lambda p: True))
+
+
+# ---------------------------------------------------------------------------
+# streaming Pareto archive == ResultSet.pareto oracle
+# ---------------------------------------------------------------------------
+
+def _oracle_keep(values):
+    """Indices ``ResultSet.pareto`` keeps for these objective columns."""
+    pairs = [(i, tuple(row)) for i, row in enumerate(values)]
+    fns = [lambda _p, r, j=j: r[j] for j in range(values.shape[1])]
+    kept = ResultSet(pairs).pareto(*fns)
+    return np.array([p for p, _ in kept])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 3),
+       levels=st.integers(2, 6))
+def test_archive_matches_resultset_pareto(seed, k, levels):
+    """Property: folding random objective columns (small integer levels ->
+    plenty of exact ties and duplicates) through the archive in arbitrary
+    chunkings equals the one-shot ``ResultSet.pareto`` oracle."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    v = rng.integers(0, levels, (n, k)).astype(float)
+    arc = ParetoArchive(k, block=64)
+    off = 0
+    while off < n:
+        step = min(int(rng.integers(1, 50)), n - off)
+        arc.update(v[off:off + step], ids=np.arange(off, off + step))
+        off += step
+    assert arc.seen == n
+    want = _oracle_keep(v)
+    assert np.array_equal(np.sort(arc.ids.astype(int)), want)
+    # pareto_mask agrees with the same oracle in one shot
+    assert np.array_equal(np.flatnonzero(pareto_mask(v)), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dominated_by_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    n, m, k = (int(x) for x in rng.integers(1, 40, 3))
+    k = max(2, k % 4)
+    v = rng.integers(0, 5, (n, k)).astype(float)
+    r = rng.integers(0, 5, (m, k)).astype(float)
+    if rng.random() < 0.3:
+        v[int(rng.integers(0, n)), 0] = np.nan
+    want = np.array([any((rr <= vv).all() and (rr < vv).any() for rr in r)
+                     for vv in v])
+    assert np.array_equal(dominated_by(v, r), want)
+
+
+def test_archive_feasibility_and_accumulation():
+    arc = ParetoArchive(2)
+    arc.update([[1.0, 5.0], [2.0, 2.0], [9.0, 9.0]], ids=list("abc"),
+               feasible=np.array([True, True, False]))
+    assert arc.seen == 3 and arc.dropped == 1
+    assert set(arc.ids) == {"a", "b"}
+    # a later strictly-better row prunes the archived ones
+    arc.update([[0.5, 1.0]], ids=["d"])
+    ids, vals = arc.frontier()
+    assert list(ids) == ["d"]
+    assert vals.tolist() == [[0.5, 1.0]]
+    # NaN rows neither dominate nor die
+    arc.update([[np.nan, 0.0]], ids=["e"])
+    assert set(arc.ids) == {"d", "e"}
+
+
+def test_stream_frontier_end_to_end(ev):
+    """Frontier of a small mixed lattice == one-shot table frontier; the
+    feasibility gate drops exactly the designs below min_ips."""
+    placements = Placement.enumerate("eyeriss", PLACEMENT_TECHS)[:8]
+    space = DesignSpace.product_iter(
+        "mini", workload="detnet", arch="eyeriss", pe_config=("v1", "v2"),
+        node=(45, 7), placement=placements)
+    points = list(space)
+    table = ev.evaluate_table(points)
+    v = np.stack([table.edp, table.memory_power_at(10.0)], axis=1)
+    feas = table.max_ips >= 10.0
+    arc = stream_frontier(ev, space, objectives=("edp", "pmem"), ips=10.0,
+                          chunk_size=5, min_ips=10.0)
+    assert arc.seen == len(points)
+    assert arc.dropped == int((~feas).sum())
+    idx = np.flatnonzero(feas)
+    want = idx[pareto_mask(v[feas])]
+    assert np.array_equal(np.sort(arc.ids.astype(int)), want)
+    # survivors materialize through point_at and re-price to the same rows
+    for i, row in zip(*arc.frontier()):
+        p = space.point_at(int(i))
+        t = ev.evaluate_table([p])
+        assert float(t.edp[0]) == row[0]
+        assert float(t.memory_power_at(10.0)[0]) == row[1]
+
+
+# ---------------------------------------------------------------------------
+# population optimizer
+# ---------------------------------------------------------------------------
+
+def test_nsga_selection_prefers_rank_then_spread():
+    v = np.array([[0.0, 3.0], [1.0, 1.0], [3.0, 0.0],   # the frontier
+                  [2.0, 2.0], [4.0, 4.0]])              # dominated
+    ranks = pareto_ranks(v)
+    assert ranks.tolist() == [0, 0, 0, 1, 2]
+    keep = crowded_select(v, 3)
+    assert sorted(keep.tolist()) == [0, 1, 2]
+    # boundary points survive a tighter cut (infinite crowding distance)
+    keep2 = crowded_select(v[:3], 2)
+    assert set(keep2.tolist()) <= {0, 1, 2} and len(keep2) == 2
+
+
+def test_evolve_dominates_greedy_within_budget(ev):
+    """Acceptance bar: on detnet @ 10 IPS the 10-generation fleet is at
+    least as good as the converged greedy walker (it embeds the
+    incumbent's full neighborhood, so this holds by construction)."""
+    start = DesignPoint(workload="detnet", arch="cpu", node=45,
+                        variant="sram")
+    gp, gval, gsteps = greedy(ev, start, metric="pmem", ips=10.0)
+    assert gsteps <= 10
+    res = evolve(ev, workload="detnet", objectives=("pmem",), ips=10.0,
+                 generations=10, population=24, seed=0)
+    assert res.best_value <= gval
+    assert res.generations == 10
+    assert len(res.archive) >= 1
+    # the frontier is over everything evaluated, best included
+    pts, vals = res.frontier()
+    assert res.best_value == vals[:, 0].min()

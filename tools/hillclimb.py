@@ -72,63 +72,36 @@ def profile_hlo(hlo: str, top: int = 18):
 # DSE mode: greedy local search over the experiment design space
 # ---------------------------------------------------------------------------
 
-DSE_AXES = dict(
-    arch=("cpu", "eyeriss", "simba"),
-    node=(45, 40, 28, 22, 7),
-    variant=("sram", "p0", "p1"),
-    nvm=(None, "stt", "sot", "vgsot"),
-    pe_config=("v1", "v2"),
-    # precision dimension: stored operand widths (None = the specs' INT8
-    # default, so an explicit 8 would only duplicate it); sizing, traffic
-    # and area all respond (DESIGN.md §5)
-    weight_bits=(None, 4),
-    act_bits=(None, 4),
-)
+# The move generators live in repro.search.moves (shared with the
+# population optimizer); these module-level names are the stable import
+# surface the tests and the system mode use.
+def _moves():
+    from repro.search import moves
+    return moves
+
 
 def _arch_move(point, arch_name):
-    """Arch-axis neighbor: level-NAME placement entries do not transfer
-    between hierarchies, so drop the ones the new arch lacks (class/'*'
-    selectors and the paper-variant shapes carry over untouched)."""
-    from repro.core.placement import Placement
-
-    moved = point.with_(arch=arch_name)
-    arch = moved.arch_spec()
-    keep = ({l.name for l in arch.levels} | {l.cls for l in arch.levels}
-            | {"*"})
-    entries = tuple(e for e in point.placement.entries if e[0] in keep)
-    if entries == point.placement.entries:
-        return moved
-    return moved.with_(
-        placement=Placement.per_level(entries, nvm=point.placement.nvm))
+    return _moves().arch_move(point, arch_name)
 
 
 def placement_moves(point, techs=None):
-    """Hillclimb neighbors that re-assign ONE memory level's technology
-    (``Placement.with_level``) over the lattice menu
-    (``experiment.PLACEMENT_TECHS`` — the placement dimension, DESIGN.md
-    §6 §Placement), skipping no-op moves against the point's
-    currently-resolved per-level techs."""
-    from repro.core import devices as dev
-    from repro.core.experiment import PLACEMENT_TECHS
+    return _moves().placement_moves(point, techs)
 
-    if techs is None:
-        techs = PLACEMENT_TECHS
-    arch = point.arch_spec()
-    default = point.nvm or dev.PAPER_NVM_AT_NODE.get(point.node, "stt")
-    current = point.placement.techs_for(arch.levels, default_nvm=default)
-    return [point.with_(placement=point.placement.with_level(lvl.name, tech))
-            for lvl, cur in zip(arch.levels, current)
-            for tech in techs if tech != cur]
+
+def __getattr__(name):
+    if name == "DSE_AXES":
+        return _moves().DSE_AXES
+    raise AttributeError(name)
 
 
 def dse_main(a):
-    """Greedy local search on the COLUMNAR path: every neighborhood is one
-    ``EnergyTable`` pricing (a single vectorized pass over ~16 points) and
-    the objective is a table column — no per-point report objects."""
-    import numpy as np
-
+    """Greedy local search on the COLUMNAR path (repro.search.moves.greedy):
+    every neighborhood is one ``EnergyTable`` pricing (a single vectorized
+    pass over ~30 points) and the objective is a table column — no
+    per-point report objects."""
     from repro.core.experiment import Evaluator
-    from repro.core.space import DesignPoint, DesignSpace
+    from repro.core.space import DesignPoint
+    from repro.search.moves import greedy
 
     if a.objective == "edp":
         metric = "edp"
@@ -141,47 +114,26 @@ def dse_main(a):
         fmt = lambda v: f"P_mem@{a.ips}ips={v*1e6:.1f} uW"
 
     ev = Evaluator()
-
-    def best_of(space):
-        """(point, metric value, table row) of the space's argmin column."""
-        table = ev.evaluate_table(space)
-        vals = table.column(metric, ips=a.ips)
-        i = int(np.argmin(vals))
-        return table.points[i], float(vals[i]), (table, i)
-
-    point = DesignPoint(workload=a.workload, arch="cpu", node=45,
+    start = DesignPoint(workload=a.workload, arch="cpu", node=45,
                         variant="sram")
-    best = best_of(DesignSpace.from_points([point], name="start"))
     t0 = time.monotonic()
     print(f"=== DSE hillclimb: {a.workload}, objective {a.objective} ===")
-    step = 0
-    while True:
-        cur_point = best[0]
-        neighbors = [cur_point.with_(**{axis: v})
-                     for axis, values in DSE_AXES.items() if axis != "arch"
-                     for v in values if v != getattr(cur_point, axis)]
-        neighbors += [_arch_move(cur_point, v) for v in DSE_AXES["arch"]
-                      if v != cur_point.arch]
-        neighbors += placement_moves(cur_point)
-        hood = DesignSpace.from_points([cur_point] + neighbors,
-                                       name=f"hood{step}")
-        cand = best_of(hood)
-        if cand[1] >= best[1]:
-            break
-        best = cand
-        step += 1
-        p = best[0]
+
+    def on_step(step, p, v):
         print(f"  step {step}: {p.arch}/{p.node}nm/{p.variant}"
               f"/{p.nvm or 'auto'}/{p.pe_config}/{p.precision_label}"
-              f"  {fmt(best[1])}")
-    p, val, (table, i) = best
+              f"  {fmt(v)}")
+
+    p, val, steps = greedy(ev, start, metric=metric, ips=a.ips,
+                           on_step=on_step)
+    table = ev.evaluate_table([p])
     hits, misses = ev.cache_info()["traffic"]
-    print(f"\nlocal optimum after {step} steps "
+    print(f"\nlocal optimum after {steps} steps "
           f"({time.monotonic()-t0:.1f}s, traffic cache {hits}h/{misses}m):")
     print(f"  {p.arch} @ {p.node}nm, {p.variant}/{p.nvm or 'auto'}, "
           f"pe={p.pe_config}, {p.precision_label}: {fmt(val)}  "
-          f"lat={float(table.latency_s[i])*1e3:.2f}ms  "
-          f"E={float(table.total_pj[i])/1e6:.2f}uJ")
+          f"lat={float(table.latency_s[0])*1e3:.2f}ms  "
+          f"E={float(table.total_pj[0])/1e6:.2f}uJ")
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +169,7 @@ def system_main(a):
 
     from repro.core.experiment import XR_BUNDLE, Evaluator
     from repro.core.schedule import SystemPoint
+    from repro.search.moves import DSE_AXES
 
     streams = parse_streams(a.stream) if a.stream else XR_BUNDLE
     ev = Evaluator()
