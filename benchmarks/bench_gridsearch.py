@@ -247,6 +247,12 @@ def measure(cells, repeats=3):
     # guards against per-element-width regressions in pricing
     space_w4a8 = gridsearch.build_space(weight_bits=4, act_bits=8)
     idx_w4a8 = gridsearch.build_indices(space_w4a8)
+    # int4 compute-swept corner: lane splitting halves compute cycles and
+    # the mul/delivery width columns all go active (DESIGN.md §10) — the
+    # full precision-aware pricing path, timed against the int8 anchor cell
+    ev_int4 = Evaluator(cache_reports=False)
+    space_int4 = gridsearch.build_space(weight_bits=4, act_bits=4)
+    idx_int4 = gridsearch.build_indices(space_int4)
     # full Simba placement lattice at one node (4 techs ^ 4 levels = 256
     # hierarchies): one vectorized pricing per cell, re-priced per knob combo
     space_plc = placement_space(workloads=("detnet",), arch="simba", node=7)
@@ -261,6 +267,7 @@ def measure(cells, repeats=3):
     gridsearch.score_reports(ev_row)
     pr1_score(ev_pr1)
     gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8)
+    gridsearch.score(ev_int4, space_int4, idx_int4)
     placement_cell(ev_plc, space_plc)
     system_cell(ev_sys, space_sys)
 
@@ -278,6 +285,8 @@ def measure(cells, repeats=3):
     t_seed, errs_seed = best_of(seed_score)
     t_w4a8, _ = best_of(
         lambda: gridsearch.score(ev_w4a8, space_w4a8, idx_w4a8))
+    t_int4, _ = best_of(
+        lambda: gridsearch.score(ev_int4, space_int4, idx_int4))
     t_plc, _ = best_of(lambda: (placement_cell(ev_plc, space_plc), {}))
     t_sys, _ = best_of(lambda: (system_cell(ev_sys, space_sys), {}))
 
@@ -294,6 +303,7 @@ def measure(cells, repeats=3):
         rowview_ms_per_cell=t_row / cells * 1e3,
         columnar_ms_per_cell=t_col / cells * 1e3,
         w4a8_ms_per_cell=t_w4a8 / cells * 1e3,
+        int4_ms_per_cell=t_int4 / cells * 1e3,
         placement_ms_per_cell=t_plc / cells * 1e3,
         placement_points=len(space_plc),
         speedup_pr1_vs_seed=t_seed / t_pr1,
@@ -303,6 +313,7 @@ def measure(cells, repeats=3):
         system_ms_per_cell=t_sys / cells * 1e3,
         system_points=len(space_sys),
         ratio_w4a8_vs_int8=t_w4a8 / t_col,
+        ratio_int4_vs_int8=t_int4 / t_col,
         # per-PLACEMENT cost vs per-POINT cost of the int8 variant cell:
         # both are single vectorized pricings, so this should sit near (or
         # below — bigger batch amortizes better) 1.0
@@ -342,6 +353,8 @@ def main():
           f" ms/cell  {m['speedup_columnar_vs_seed']:6.1f}x")
     print(f"columnar w4a8 corner:       {m['w4a8_ms_per_cell']:8.2f}"
           f" ms/cell  ({m['ratio_w4a8_vs_int8']:.2f}x int8 cell)")
+    print(f"columnar int4 compute cell: {m['int4_ms_per_cell']:8.2f}"
+          f" ms/cell  ({m['ratio_int4_vs_int8']:.2f}x int8 cell)")
     print(f"placement lattice "
           f"({m['placement_points']:3d} pts): {m['placement_ms_per_cell']:8.2f}"
           f" ms/cell  ({m['ratio_placement_point_vs_int8']:.2f}x int8"
@@ -380,6 +393,19 @@ def main():
                   f"(baseline {base_q:.2f}, ceiling {ceil_q:.2f})")
             if got_q > ceil_q:
                 print("FAIL: >2x regression of the mixed-precision cell")
+                failed = True
+        # int4 compute-sweep guard: the fully-quantized cell exercises the
+        # whole precision-aware compute plane (lane split + mul/delivery
+        # width columns); like w4a8 it prices a same-shaped plan, so it
+        # must not drift away from the int8 anchor cell
+        base_i4 = base.get("ratio_int4_vs_int8")
+        if base_i4 is not None:
+            ceil_i4 = max(base_i4, 1.0) * 2.0
+            got_i4 = m["ratio_int4_vs_int8"]
+            print(f"check: int4-vs-int8 cell ratio {got_i4:.2f} "
+                  f"(baseline {base_i4:.2f}, ceiling {ceil_i4:.2f})")
+            if got_i4 > ceil_i4:
+                print("FAIL: >2x regression of the int4 compute-swept cell")
                 failed = True
         # placement guard: a lattice point prices through the same columnar
         # pass as a variant point, so the per-placement cost must not drift

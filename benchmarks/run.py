@@ -35,6 +35,25 @@ def analysis_smoke():
                   f"0 new")
 
 
+def calibrate_smoke():
+    """Kernel calibration harness (repro.calibrate) timed like a figure:
+    re-runs the Pallas measurement corners in interpret mode and fails the
+    smoke on any fit-residual regression (or constant drift) against the
+    checked-in src/repro/calibrate/calibrated.json."""
+    from repro import calibrate
+
+    data = calibrate.run_calibration()
+    fails = calibrate.check(data=data)
+    if fails:
+        raise SystemExit("calibrate_smoke: fit-residual regression:\n"
+                         + "\n".join(fails))
+    rows = [{"constant": k, "value": v}
+            for k, v in sorted(data["constants"].items())]
+    resid = max(data["residuals"].values())
+    return rows, (f"{len(data['samples'])} corners, "
+                  f"max residual {resid:.3g}, 0 regressions")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", default=None)
@@ -44,7 +63,8 @@ def main() -> None:
 
     all_rows = {}
     print("name,us_per_call,derived")
-    fns = list(paper.ALL) + [roofline_table.roofline_table, analysis_smoke]
+    fns = list(paper.ALL) + [roofline_table.roofline_table, analysis_smoke,
+                             calibrate_smoke]
     for fn in fns:
         t0 = time.monotonic()
         rows, derived = fn()

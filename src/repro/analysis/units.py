@@ -145,7 +145,9 @@ TOKENS: Dict[str, Unit] = {
     "mac": DIMENSIONLESS,
     "macs": DIMENSIONLESS,
     "elems": DIMENSIONLESS,
+    "cycle": DIMENSIONLESS,                  # _macs_per_cycle throughput
     "cycles": DIMENSIONLESS,
+    "pe": DIMENSIONLESS,                     # _macs_per_pe_per_cycle
     "count": DIMENSIONLESS,
     "scale": DIMENSIONLESS,
     "frac": DIMENSIONLESS,
@@ -168,7 +170,7 @@ _NODE_TAG = re.compile(r"_(?:\d+)$")       # _45, _7 process-node tags
 
 #: singular forms are denominators only (``pj_per_bit``), never a name's
 #: own unit — ``e_bit`` holds an energy, not a bit count.
-_NOT_A_TAIL = {"bit", "byte", "mac"}
+_NOT_A_TAIL = {"bit", "byte", "mac", "cycle", "pe"}
 
 
 def parse_name(name: str) -> Optional[Unit]:

@@ -1,0 +1,13 @@
+"""Kernel-measurement calibration of the compute-plane constants.
+
+See ``repro.calibrate.harness`` for the measurement/fit flow and
+DESIGN.md §10 for the model the fitted constants feed. The checked-in
+``calibrated.json`` is what ``repro.core.devices.load_calibrated``
+consumes — this package is only imported when (re)fitting or checking.
+"""
+from repro.calibrate.harness import (CALIB_PATH, CalSample, check,
+                                     fit_constants, run_calibration,
+                                     run_samples, write_calibrated)
+
+__all__ = ["CALIB_PATH", "CalSample", "check", "fit_constants",
+           "run_calibration", "run_samples", "write_calibrated"]

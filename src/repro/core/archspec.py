@@ -28,6 +28,8 @@ import warnings
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
+from repro.core.devices import COMPUTE_ARCHETYPES, ComputeSpec
+
 
 @dataclass(frozen=True)
 class MemLevel:
@@ -66,6 +68,11 @@ class ArchSpec:
     pe_y: int
     levels: Tuple[MemLevel, ...]
     clock_class: str = "systolic"  # -> devices.BASE_CLOCK_GHZ_45
+    # Precision-aware datapath archetype (devices.ComputeSpec): sets the
+    # per-precision lane split the mappers bake into compute_cycles and the
+    # issue-overhead amortization the pricers charge. Exactly neutral at the
+    # INT8 anchor for every archetype.
+    compute: ComputeSpec = COMPUTE_ARCHETYPES["systolic"]
 
     @property
     def num_pes(self) -> int:
@@ -98,10 +105,22 @@ def cpu_spec(weight_kb: float = 4096, act_kb: float = 2048) -> ArchSpec:
     return ArchSpec(
         name="cpu", dataflow="sequential", baseline_node=45,
         pe_x=1, pe_y=8, clock_class="cpu",
+        compute=COMPUTE_ARCHETYPES["cpu-simd"],
         levels=(
             MemLevel("weight_mem", "weight", 256, _banks(weight_kb, 256), 64),
             MemLevel("act_mem", "unified", 256, _banks(act_kb, 256), 64),
         ))
+
+
+def xr_npe_spec(weight_kb: float = 4096, act_kb: float = 2048) -> ArchSpec:
+    """XR-NPE-style mixed-precision SIMD coprocessor (PAPERS.md): CPU-class
+    memory geometry (unified SRAM, 64-bit bus, sequential mapping, CPU
+    clock) around a 2D lane-splitting vector datapath — w4a8 doubles and
+    int4 quadruples MACs/cycle, and the per-issue overhead amortizes over
+    the packed sub-ops (superlinear low-precision energy wins)."""
+    base = cpu_spec(weight_kb, act_kb)
+    return dataclasses.replace(base, name="xr-npe",
+                               compute=COMPUTE_ARCHETYPES["xr-npe"])
 
 
 def eyeriss_spec(pe_config: str = "v2", weight_kb: float = 4096,
@@ -141,7 +160,8 @@ def simba_spec(pe_config: str = "v2", weight_kb: float = 4096,
         ))
 
 
-ARCHS = {"cpu": cpu_spec, "eyeriss": eyeriss_spec, "simba": simba_spec}
+ARCHS = {"cpu": cpu_spec, "eyeriss": eyeriss_spec, "simba": simba_spec,
+         "xr-npe": xr_npe_spec}
 
 _ARCH_PARAMS = {n: frozenset(inspect.signature(fn).parameters)
                 for n, fn in ARCHS.items()}
@@ -151,14 +171,14 @@ def get_arch(name: str, **kw) -> ArchSpec:
     if name not in ARCHS:
         raise KeyError(f"unknown arch {name!r} (one of {sorted(ARCHS)})")
     unknown = set(kw) - _ARCH_PARAMS[name]
-    if unknown == {"pe_config"} and name == "cpu":
+    if unknown == {"pe_config"} and "pe_config" not in _ARCH_PARAMS[name]:
         # Historic asymmetry: sweeps carry pe_config for every point, but the
-        # CPU model has no PE array config. Warn-and-ignore keeps those
-        # sweeps working; anything else unknown is a hard error so a sweep
-        # definition can't silently diverge from intent.
+        # sequential models (cpu, xr-npe) have no PE array config. Warn-and-
+        # ignore keeps those sweeps working; anything else unknown is a hard
+        # error so a sweep definition can't silently diverge from intent.
         warnings.warn(
-            "get_arch('cpu'): ignoring pe_config (the CPU model has no PE "
-            "array configuration)", stacklevel=2)
+            f"get_arch({name!r}): ignoring pe_config (the {name} model has "
+            "no PE array configuration)", stacklevel=2)
         kw.pop("pe_config")
     elif unknown:
         raise TypeError(

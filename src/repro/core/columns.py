@@ -76,6 +76,8 @@ class TrafficTable:
     macs: np.ndarray            # (N,)
     delivery_macs: np.ndarray   # (N,)
     compute_cycles: np.ndarray  # (N,)
+    weight_bits: np.ndarray     # (N,) per-layer operand widths the mapping
+    act_bits: np.ndarray        # (N,) was priced at (compute plane)
 
     # --- construction -------------------------------------------------------
     @classmethod
@@ -95,6 +97,8 @@ class TrafficTable:
             macs=np.zeros(n_layers),
             delivery_macs=np.zeros(n_layers),
             compute_cycles=np.zeros(n_layers),
+            weight_bits=np.full(n_layers, 8.0),
+            act_bits=np.full(n_layers, 8.0),
         )
 
     @classmethod
@@ -110,6 +114,8 @@ class TrafficTable:
             kw["macs"][i] = a.macs
             kw["delivery_macs"][i] = a.delivery_macs
             kw["compute_cycles"][i] = a.compute_cycles
+            kw["weight_bits"][i] = a.weight_bits
+            kw["act_bits"][i] = a.act_bits
         return cls(**kw)
 
     @classmethod
@@ -128,6 +134,10 @@ class TrafficTable:
         I = np.array([s.in_elems for s in specs], float) * abits
         O = np.array([s.out_elems for s in specs], float)
         macs = np.array([s.macs for s in specs], float)
+        # per-layer SIMD lane split of the arch's compute archetype (exactly
+        # 1.0 at int8: num_pes * 1.0 == float(num_pes), so int8 cycles are
+        # bit-identical to the fixed-datapath model)
+        split = arch.compute.macs_per_pe_per_cycle(wbits, abits)
         is_dw = np.array([s.kind == "dwconv" for s in specs])
         out_ch = np.array([s.out_ch for s in specs], float)
         in_bytes = np.array([s.in_bytes for s in specs], float)
@@ -141,7 +151,7 @@ class TrafficTable:
             rb[:, col["weight_mem"]] = W
             rb[:, col["act_mem"]] = I
             wb[:, col["act_mem"]] = O * abits
-            kw["compute_cycles"] = macs / dfl.CPU_SIMD
+            kw["compute_cycles"] = macs / (dfl.CPU_SIMD * split)
         elif arch.dataflow == "weight":
             wb_bits = arch.level("pe_wb").capacity_bits
             n_wtiles = np.maximum(1.0, np.ceil(W / wb_bits))
@@ -161,7 +171,7 @@ class TrafficTable:
             rb[:, col["input_buf"]] = I * np.maximum(n_wtiles, n_kpasses) * rf
             wb[:, col["accum_buf"]] = O * pbits * n_ctiles
             rb[:, col["accum_buf"]] = O * pbits * n_ctiles
-            kw["compute_cycles"] = macs / arch.num_pes
+            kw["compute_cycles"] = macs / (arch.num_pes * split)
         elif arch.dataflow == "row":
             oh = np.array([s.out_hw[0] for s in specs], float)
             k = np.array([s.kernel for s in specs], int)
@@ -174,11 +184,13 @@ class TrafficTable:
             rb[:, col["pe_spad"]] = macs * wbits
             wb[:, col["glb"]] = I * rf + O * pbits
             rb[:, col["glb"]] = I * n_ktiles * rf
-            kw["compute_cycles"] = macs / arch.num_pes
+            kw["compute_cycles"] = macs / (arch.num_pes * split)
         else:
             raise ValueError(arch.dataflow)
         kw["macs"] = macs
         kw["delivery_macs"] = macs
+        kw["weight_bits"] = wbits
+        kw["act_bits"] = abits
         return cls(**kw)
 
     # --- aggregates / views -------------------------------------------------
@@ -210,6 +222,40 @@ class TrafficTable:
     def total_compute_cycles(self) -> float:
         return float(self.compute_cycles.sum())
 
+    # --- compute-plane group scalars (DESIGN.md §10) ------------------------
+    # MACs-weighted means over the layers; combined with the module-level
+    # energy constants at PRICE time (plans stay device-constant-free).
+    # Each is exactly its int8 anchor value (0.0 / 1.0 / 0.0) when every
+    # layer is int8, which is what keeps int8 pricing bit-identical.
+    @property
+    def mul_frac(self) -> float:
+        """Excess multiplier bit-work per MAC vs INT8 (0.0 at the anchor)."""
+        total = self.macs.sum()
+        if total == 0.0:
+            return 0.0
+        return float((self.macs * dev.mac_mul_units(
+            self.weight_bits, self.act_bits)).sum() / total)
+
+    @property
+    def issue_ratio(self) -> float:
+        """Issue slots per MAC: 1/lane-split, MACs-weighted (1.0 at int8)."""
+        total = self.macs.sum()
+        if total == 0.0:
+            return 1.0
+        split = self.arch.compute.macs_per_pe_per_cycle(self.weight_bits,
+                                                        self.act_bits)
+        return float((self.macs / split).sum() / total)
+
+    @property
+    def dlvw_frac(self) -> float:
+        """Excess operand-pair delivery width per MAC vs INT8 (0.0 at the
+        anchor)."""
+        total = self.delivery_macs.sum()
+        if total == 0.0:
+            return 0.0
+        return float((self.delivery_macs * dev.delivery_width_units(
+            self.weight_bits, self.act_bits)).sum() / total)
+
     def aggregate(self) -> Dict[str, LevelTraffic]:
         """Workload totals in the legacy ``total_traffic`` shape."""
         r, w = self.total_read_bits, self.total_write_bits
@@ -223,7 +269,8 @@ class TrafficTable:
                    for j, n in enumerate(self.level_names)}
         return LayerAccess(self.layer_names[i], int(self.macs[i]), traffic,
                            float(self.compute_cycles[i]),
-                           int(self.delivery_macs[i]))
+                           int(self.delivery_macs[i]),
+                           int(self.weight_bits[i]), int(self.act_bits[i]))
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +304,11 @@ class PricingPlan:
     macs: np.ndarray                     # (P,)
     delivery_macs: np.ndarray            # (P,)
     compute_cycles: np.ndarray           # (P,)
+    # compute-plane geometry (dimensionless, MACs-weighted; exactly
+    # 0.0 / 1.0 / 0.0 at the int8 anchor — TrafficTable.mul_frac et al.)
+    mul_frac: np.ndarray                 # (P,)
+    issue_ratio: np.ndarray              # (P,)
+    dlvw_frac: np.ndarray                # (P,)
     # per-(point, level) geometry, padded to the widest arch
     mask: np.ndarray                     # (P, L) bool: real level
     level_names: np.ndarray              # (P, L) object
@@ -308,6 +360,9 @@ def group_geometry(groups: Sequence[TrafficTable]) -> Dict[str, np.ndarray]:
         macs=np.array([float(t.total_macs) for t in groups]),
         dmacs=np.array([float(t.total_delivery_macs) for t in groups]),
         cycles=np.array([t.total_compute_cycles for t in groups]),
+        mul_frac=np.array([t.mul_frac for t in groups]),
+        issue_ratio=np.array([t.issue_ratio for t in groups]),
+        dlvw_frac=np.array([t.dlvw_frac for t in groups]),
         Lmax=Lmax)
 
 
@@ -331,6 +386,7 @@ def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
     g_count, g_read, g_write = g["count"], g["read"], g["write"]
     g_tech, g_is_cpu, g_pes = g["tech"], g["is_cpu"], g["pes"]
     g_macs, g_dmacs, g_cycles = g["macs"], g["dmacs"], g["cycles"]
+    g_mulf, g_issue, g_dlvw = g["mul_frac"], g["issue_ratio"], g["dlvw_frac"]
 
     nodes = tuple(p.node for p in points)
     node_list, node_idx = np.unique(np.array(nodes, int),
@@ -364,6 +420,8 @@ def build_plan(groups: Sequence[TrafficTable], gidx: Sequence[int],
         clock_keys=clock_keys, clock_idx=clock_idx,
         is_cpu=g_is_cpu[gidx], num_pes=g_pes[gidx], macs=g_macs[gidx],
         delivery_macs=g_dmacs[gidx], compute_cycles=g_cycles[gidx],
+        mul_frac=g_mulf[gidx], issue_ratio=g_issue[gidx],
+        dlvw_frac=g_dlvw[gidx],
         mask=g_mask[gidx], level_names=g_names[gidx], level_cls=g_cls[gidx],
         weight_cls=weight_cls, macro_kb=g_macro[gidx],
         capacity_kb=g_cap[gidx], bus_bits=g_bus[gidx], count=g_count[gidx],
@@ -566,11 +624,17 @@ def price(plan: PricingPlan) -> EnergyTable:
     cycles = (plan.read_bits / plan.bus_bits * rc
               + plan.write_bits / plan.bus_bits * wc)
 
-    mac_pj = (dev.MAC_INT8_PJ_45
-              + np.where(plan.is_cpu, dev.CPU_OP_OVERHEAD_PJ_45, 0.0)) * scale
+    # Precision-aware compute plane (DESIGN.md §10): the plan carries the
+    # dimensionless geometry (mul_frac/issue_ratio/dlvw_frac), constants are
+    # read HERE so device-table mutation is honored. At the int8 anchor the
+    # extra terms are exactly 0.0 * C and 1.0 * C — bit-identical pricing.
+    mac_pj = (dev.MAC_INT8_PJ_45 + dev.MAC_MUL_PJ_45 * plan.mul_frac
+              + np.where(plan.is_cpu, dev.CPU_OP_OVERHEAD_PJ_45, 0.0)
+              * plan.issue_ratio) * scale
     compute_pj = plan.macs * mac_pj
-    dpj45 = np.where(plan.is_cpu, dfl.CPU_DELIVERY_PJ_PER_MAC_45,
-                     dfl.DELIVERY_PJ_PER_MAC_45)
+    dpj45 = (np.where(plan.is_cpu, dfl.CPU_DELIVERY_PJ_PER_MAC_45,
+                      dfl.DELIVERY_PJ_PER_MAC_45)
+             * (1.0 + dfl.DELIVERY_WIDTH_FRAC * plan.dlvw_frac))
     delivery_pj = plan.delivery_macs * dpj45 * scale
 
     lvl_max = cycles.max(axis=1)

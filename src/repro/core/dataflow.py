@@ -32,20 +32,29 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
 from repro.configs.base import ConvLayerSpec
+from repro.core import devices as dev
 from repro.core.archspec import ArchSpec
 
 # Operand widths live on ``ConvLayerSpec`` (``weight_bits`` / ``act_bits``
 # / derived ``psum_width``, INT8 defaults): the mappers read the PER-LAYER
 # widths so mixed-precision workloads price every operand at its stored
-# width. The MAC array itself stays an INT8 datapath (DESIGN.md §5
-# §Precision), hence the fixed CPU SIMD factor below.
-CPU_SIMD = 8            # 64-bit datapath -> 8 INT8 MACs/cycle
+# width. The MAC array is precision-aware too (DESIGN.md §10): each arch's
+# ``compute`` archetype (devices.ComputeSpec) sets a per-layer lane split
+# that the mappers bake into compute_cycles — exactly 1.0 at the INT8
+# anchor, so int8 mappings are bit-identical to the fixed-datapath model.
+CPU_SIMD = 8            # 64-bit datapath -> 8 INT8 MACs/cycle @ the anchor
 # Operand delivery (array NoC hops + operand-collector regfiles) per MAC,
 # pJ @ 45nm. Long wires across a 64x64 array make this the dominant "memory"
 # cost of the systolic designs (paper Fig 2e: memory >> compute; Fig 2f:
 # systolic energy above the sequential CPU despite the latency win).
 DELIVERY_PJ_PER_MAC_45 = 0.55
 CPU_DELIVERY_PJ_PER_MAC_45 = 0.10   # load-store forwarding within the core
+# Fraction of the delivery cost that scales with the operand-pair width
+# ((w+a) bits of wires/collector flops per MAC); the remainder is fixed
+# control/handshake. Fitted by ``repro.calibrate`` against the pallas
+# kernels' measured byte counts; multiplies ``devices.delivery_width_units``
+# which is exactly 0.0 at int8 (anchor invariant).
+DELIVERY_WIDTH_FRAC = dev.CALIBRATED["delivery_width_frac"]
 
 
 @dataclass
@@ -62,6 +71,8 @@ class LayerAccess:
     traffic: Dict[str, LevelTraffic]       # level name -> bits moved
     compute_cycles: float
     delivery_macs: int                     # MACs paying the delivery cost
+    weight_bits: int = 8                   # operand widths the layer was
+    act_bits: int = 8                      # mapped at (compute pricing)
 
     def total_read_bits(self) -> float:
         return sum(t.read_bits for t in self.traffic.values())
@@ -78,13 +89,21 @@ def _ceil(a: float, b: float) -> int:
 # per-dataflow mappers
 # ---------------------------------------------------------------------------
 
+def _lane_split(spec: ConvLayerSpec, arch: ArchSpec) -> float:
+    """Per-layer SIMD lane split of the arch's compute archetype (1.0 at
+    the INT8 anchor — see ``devices.ComputeSpec``)."""
+    return float(arch.compute.macs_per_pe_per_cycle(spec.weight_bits,
+                                                    spec.act_bits))
+
+
 def _map_sequential(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t = {l.name: LevelTraffic() for l in arch.levels}
     t["weight_mem"].read_bits = spec.weight_elems * spec.weight_bits
     t["act_mem"].read_bits = spec.in_elems * spec.act_bits
     t["act_mem"].write_bits = spec.out_elems * spec.act_bits
-    cycles = spec.macs / CPU_SIMD
-    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs)
+    cycles = spec.macs / (CPU_SIMD * _lane_split(spec, arch))
+    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs,
+                       spec.weight_bits, spec.act_bits)
 
 
 def _act_refetch(spec: ConvLayerSpec, act_capacity_kb: float) -> int:
@@ -127,8 +146,9 @@ def _map_weight_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t["accum_buf"].write_bits = O * spec.psum_width * n_ctiles
     t["accum_buf"].read_bits = O * spec.psum_width * n_ctiles  # revisits + drain
 
-    cycles = spec.macs / (arch.num_pes)
-    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs)
+    cycles = spec.macs / (arch.num_pes * _lane_split(spec, arch))
+    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs,
+                       spec.weight_bits, spec.act_bits)
 
 
 def _map_row_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
@@ -155,8 +175,9 @@ def _map_row_stationary(spec: ConvLayerSpec, arch: ArchSpec) -> LayerAccess:
     t["glb"].write_bits = I * refetch + O * spec.psum_width
     t["glb"].read_bits = I * n_ktiles * refetch
 
-    cycles = spec.macs / arch.num_pes
-    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs)
+    cycles = spec.macs / (arch.num_pes * _lane_split(spec, arch))
+    return LayerAccess(spec.name, spec.macs, t, cycles, spec.macs,
+                       spec.weight_bits, spec.act_bits)
 
 
 _MAPPERS = {

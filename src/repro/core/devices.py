@@ -18,7 +18,9 @@ All constants live HERE and nowhere else. Sources and calibration:
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 from typing import Dict
 
 import numpy as np
@@ -176,7 +178,7 @@ def macro_area_mm2(dev: str, capacity_kb: float, node: int,
 
 
 # ---------------------------------------------------------------------------
-# compute (MAC) model
+# compute (MAC) model — precision-aware (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 
 # INT8 MAC energy @ 45nm reference (pJ/op). The CPU pays instruction-stream
@@ -189,9 +191,119 @@ MAC_AREA_UM2_45 = 410.0             # INT8 MAC + pipeline registers
 # Peak clock at 45nm reference (logic-limited), per architecture class.
 BASE_CLOCK_GHZ_45 = {"cpu": 2.0, "systolic": 0.45}
 
+# Calibrated compute-plane constants (repro.calibrate fits them against the
+# pallas kernels' measured bytes/FLOPs and checks the result in as JSON).
+# Every fitted constant multiplies a term that is EXACTLY zero at the INT8
+# anchor, so refitting never moves an int8 corner (the anchor invariant).
+_CALIBRATED_DEFAULTS = {
+    # multiplier share of the INT8 MAC energy: partial-product bit-work
+    # (8x8 = 64 bit-products) vs the fixed 32-bit accumulate
+    "mac_mul_share": 64.0 / 96.0,
+    # fraction of the operand-delivery cost that scales with the operand
+    # pair width (w+a bits of wires/collector flops per MAC)
+    "delivery_width_frac": 0.5,
+}
 
-def mac_energy_pj(node: int, cpu: bool) -> float:
-    e = MAC_INT8_PJ_45 + (CPU_OP_OVERHEAD_PJ_45 if cpu else 0.0)
+_CALIB_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "calibrate", "calibrated.json")
+
+
+def load_calibrated(path: str = _CALIB_PATH) -> Dict[str, float]:
+    """Fitted compute-plane constants from the checked-in calibration JSON,
+    falling back to the structural defaults (missing file, partial fit)."""
+    out = dict(_CALIBRATED_DEFAULTS)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        for k, v in data.get("constants", {}).items():
+            if k in out:
+                out[k] = float(v)
+    except (OSError, ValueError):
+        pass
+    return out
+
+
+CALIBRATED = load_calibrated()
+
+# Energy of the EXCESS multiplier bit-work per `mac_mul_units` unit (one
+# unit == the whole int8 partial-product array). Exactly unused at int8.
+MAC_MUL_PJ_45 = CALIBRATED["mac_mul_share"] * MAC_INT8_PJ_45
+
+
+def mac_mul_units(weight_bits, act_bits):
+    """Excess multiplier bit-work per MAC vs the INT8 anchor, elementwise:
+    ``w*a/64 - 1`` (quadratic-in-bits partial-product count; exactly 0.0
+    at int8, negative for narrower operands)."""
+    w = np.asarray(weight_bits, float)
+    a = np.asarray(act_bits, float)
+    return w * a / 64.0 - 1.0
+
+
+def delivery_width_units(weight_bits, act_bits):
+    """Excess operand-pair delivery width per MAC vs INT8, elementwise:
+    ``(w+a)/16 - 1`` (exactly 0.0 at int8)."""
+    w = np.asarray(weight_bits, float)
+    a = np.asarray(act_bits, float)
+    return (w + a) / 16.0 - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeSpec:
+    """Precision-aware PE datapath archetype — STRUCTURE only (the energy
+    constants above stay module-level so calibration/grid-search mutation
+    is honored by cached plans; DESIGN.md §6).
+
+    ``lane_bits`` is one PE lane's operand width at the INT8 anchor;
+    narrower operands split each lane into ``lane_bits // width`` sub-lanes
+    (SIMD lane splitting à la XR-NPE), wider operands fuse lanes. ``two_dim``
+    engines split on weight and activation widths INDEPENDENTLY (a 2D
+    multiplier array: w4a8 already doubles throughput); 1D engines split on
+    the widest operand only. Frozen + hashable: lives on ``ArchSpec`` and
+    flows through every arch cache key.
+    """
+    archetype: str
+    lane_bits: int = 8
+    two_dim: bool = False
+
+    def _split1(self, bits):
+        b = np.maximum(np.asarray(bits, float), 1.0)
+        lanes = np.floor(self.lane_bits / b)
+        return np.where(lanes >= 1.0, lanes, 1.0 / np.ceil(b / self.lane_bits))
+
+    def macs_per_pe_per_cycle(self, weight_bits=8, act_bits=8):
+        """Throughput multiplier vs the INT8 anchor, elementwise (exactly
+        1.0 at int8 by construction; >1 for narrower operands)."""
+        anchor = self._split1(8.0)
+        if self.two_dim:
+            return (self._split1(weight_bits) * self._split1(act_bits)
+                    / (anchor * anchor))
+        wide = np.maximum(np.asarray(weight_bits, float),
+                          np.asarray(act_bits, float))
+        return self._split1(wide) / anchor
+
+
+COMPUTE_ARCHETYPES: Dict[str, ComputeSpec] = {
+    # fixed-function MAC array: int8 lanes, sub-byte operands packed 1D
+    "systolic": ComputeSpec("systolic", lane_bits=8),
+    # 64-bit SIMD datapath: 8 int8 MACs/cycle at the anchor, 16 at int4
+    "cpu-simd": ComputeSpec("cpu-simd", lane_bits=64),
+    # XR-NPE-style 2D mixed-precision array: w4a8 doubles, int4 quadruples
+    "xr-npe": ComputeSpec("xr-npe", lane_bits=8, two_dim=True),
+}
+
+
+def mac_energy_pj(node: int, cls: str = "systolic", bits=8,
+                  compute: ComputeSpec = None) -> float:
+    """Per-MAC energy at (node, arch class, operand widths). ``bits`` is a
+    single width or a ``(weight_bits, act_bits)`` pair; the CPU class pays
+    the per-issue overhead amortized over its lane split (``compute``
+    defaults to the class archetype)."""
+    wb, ab = bits if isinstance(bits, (tuple, list)) else (bits, bits)
+    e = MAC_INT8_PJ_45 + MAC_MUL_PJ_45 * float(mac_mul_units(wb, ab))
+    if cls == "cpu":
+        spec = compute or COMPUTE_ARCHETYPES["cpu-simd"]
+        e += (CPU_OP_OVERHEAD_PJ_45
+              / float(spec.macs_per_pe_per_cycle(wb, ab)))
     return e * NODE_ENERGY_SCALE[node]
 
 

@@ -108,9 +108,26 @@ def price(accesses: Sequence[LayerAccess], arch: ArchSpec, node: int,
     scale = dev.NODE_ENERGY_SCALE[node]
     clock_hz = dev.clock_ghz(node, arch.clock_class) * 1e9
 
-    compute_pj = macs * dev.mac_energy_pj(node, cpu=is_cpu)
-    dpj = (dfl.CPU_DELIVERY_PJ_PER_MAC_45 if is_cpu
-           else dfl.DELIVERY_PJ_PER_MAC_45)
+    # Precision-aware compute plane (DESIGN.md §10), as MACs-weighted means
+    # over the layers — the same aggregated form (and operation order) the
+    # columnar pass uses, so the two paths stay in bitwise lockstep at the
+    # INT8 anchor (mul/dlvw terms exactly 0.0, issue ratio exactly 1.0).
+    mul_frac = float(sum(a.macs * dev.mac_mul_units(a.weight_bits, a.act_bits)
+                         for a in accesses) / macs)
+    issue_ratio = float(sum(
+        a.macs / float(arch.compute.macs_per_pe_per_cycle(a.weight_bits,
+                                                          a.act_bits))
+        for a in accesses) / macs)
+    dlvw_frac = (float(sum(
+        a.delivery_macs * dev.delivery_width_units(a.weight_bits, a.act_bits)
+        for a in accesses) / dmacs) if dmacs else 0.0)
+    mac_pj = (dev.MAC_INT8_PJ_45 + dev.MAC_MUL_PJ_45 * mul_frac
+              + (dev.CPU_OP_OVERHEAD_PJ_45 if is_cpu else 0.0) * issue_ratio
+              ) * scale
+    compute_pj = macs * mac_pj
+    dpj = ((dfl.CPU_DELIVERY_PJ_PER_MAC_45 if is_cpu
+            else dfl.DELIVERY_PJ_PER_MAC_45)
+           * (1.0 + dfl.DELIVERY_WIDTH_FRAC * dlvw_frac))
     delivery_pj = dmacs * dpj * scale
 
     levels: Dict[str, LevelEnergy] = {}

@@ -106,8 +106,8 @@ def size_arch(arch_name: str, specs: Sequence[ConvLayerSpec],
     # round up to the bank size to avoid phantom fractional banks
     w_kb = max(256.0, math.ceil(w_kb / 256.0) * 256.0)
     a_kb = max(128.0, math.ceil(a_kb / 128.0) * 128.0)
-    if arch_name == "cpu":
-        return get_arch("cpu", weight_kb=w_kb, act_kb=a_kb)
+    if arch_name in ("cpu", "xr-npe"):   # sequential engines: no PE array
+        return get_arch(arch_name, weight_kb=w_kb, act_kb=a_kb)
     return get_arch(arch_name, pe_config=pe_config, weight_kb=w_kb,
                     act_kb=a_kb)
 
@@ -807,15 +807,25 @@ QUANT_CORNERS = (
     Bind(weight_bits=4, act_bits=4),    # int4: fully quantized
 )
 
+# Engines swept on the precision axis: the paper's systolic platforms are
+# memory-bound on the XR suite (lane splitting never moves their latency),
+# so the sweep also carries the COMPUTE-bound sequential engines — the CPU
+# (1D 64-bit SIMD) and the XR-NPE-style 2D mixed-precision coprocessor
+# (PAPERS.md) — where the compute plane sets latency and the low-precision
+# throughput/energy wins are superlinear. First two entries must stay
+# SYSTOLICS: the original 54-row sweep is a frozen byte-identity oracle.
+QUANT_ENGINES = SYSTOLICS + ("cpu", "xr-npe")
+
 
 def quant_space(workloads=PAPER_SUITE, node: int = 7,
                 context_len: int = 4096,
                 lm_archs=("llama3.2-1b",),
-                corners=QUANT_CORNERS) -> DesignSpace:
+                corners=QUANT_CORNERS,
+                engines=QUANT_ENGINES) -> DesignSpace:
     """Precision x variant space: XR suite + LM KV-cache workloads at every
     quantization corner, SRAM baseline plus both MRAM placements."""
     xr = DesignSpace.product(
-        "quant:xr", workload=workloads, arch=SYSTOLICS,
+        "quant:xr", workload=workloads, arch=engines,
         variant=("sram", "p0", "p1"), node=node, precision=corners)
     kw = (("context_len", context_len),)
     lm = DesignSpace.product(
@@ -827,14 +837,17 @@ def quant_space(workloads=PAPER_SUITE, node: int = 7,
 
 def quant_rows(ev: Evaluator, workloads=PAPER_SUITE, node: int = 7,
                context_len: int = 4096,
-               lm_archs=("llama3.2-1b",)) -> List[Dict]:
+               lm_archs=("llama3.2-1b",),
+               engines=QUANT_ENGINES) -> List[Dict]:
     """How precision shifts the SRAM-vs-MRAM trade-off: energy, latency,
-    area and the MRAM cross-over IPS per (workload, arch, corner).
+    area and the MRAM cross-over IPS per (workload, engine, corner) —
+    including the compute-bound sequential engines where lane splitting
+    moves latency, not just storage energy.
 
     Columnar end to end: one ``EnergyTable`` + one ``AreaTable`` for the
     whole space, cross-overs via batched bisection against the SAME-corner
     SRAM baseline (``sram_pairs`` keys include the operand widths)."""
-    space = quant_space(workloads, node, context_len, lm_archs)
+    space = quant_space(workloads, node, context_len, lm_archs, engines=engines)
     pts = list(space)
     table = ev.evaluate_table(space)
     areas = ev.area_table(space)

@@ -1,9 +1,18 @@
-"""jax-version compat for pallas TPU symbols.
+"""jax-version compat for pallas TPU symbols + the interpret-mode knob.
 
 The TPU compiler-params class is ``TPUCompilerParams`` in jax<=0.4.x and
 ``CompilerParams`` in newer releases; kernels import the name from here so
 they follow the current API on either toolchain.
+
+``interpret_default()`` is the single decision point for whether Pallas
+kernels run in ``interpret=True`` mode (kernel body executed as plain jax
+ops — the CPU fallback that lets the kernel tests and the calibration
+harness run on CI without a TPU). The ``REPRO_KERNEL_INTERPRET`` env var
+overrides the backend autodetect in either direction (``1``/``0``), e.g.
+to force interpret mode on a TPU host for debugging.
 """
+import os
+
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams",
@@ -12,3 +21,17 @@ if CompilerParams is None:
     raise ImportError(
         "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
         "TPUCompilerParams; update repro.kernels._compat for this jax")
+
+_TRUTHY = {"1", "true", "yes", "on"}
+_FALSY = {"0", "false", "no", "off"}
+
+
+def interpret_default() -> bool:
+    """Should Pallas kernels run in interpret mode on this host?"""
+    flag = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+    if flag in _TRUTHY:
+        return True
+    if flag in _FALSY:
+        return False
+    import jax
+    return jax.default_backend() == "cpu"

@@ -9,19 +9,15 @@ tile sizes the configs use).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels._compat import interpret_default as _interp
 from repro.kernels.depthwise_conv import depthwise_conv3x3_padded
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8_mm
 from repro.kernels.quantize import quantize_rows as _quant
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
-
-
-def _interp() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def int8_matmul(a, b, a_scale, b_scale, *, bm=128, bn=128, bk=128):

@@ -324,7 +324,9 @@ class LatticePricer:
             clock_idx=self._clk[gid, nf], is_cpu=g["is_cpu"][gid],
             num_pes=g["pes"][gid], macs=g["macs"][gid],
             delivery_macs=g["dmacs"][gid],
-            compute_cycles=g["cycles"][gid], mask=g["mask"][gid],
+            compute_cycles=g["cycles"][gid],
+            mul_frac=g["mul_frac"][gid], issue_ratio=g["issue_ratio"][gid],
+            dlvw_frac=g["dlvw_frac"][gid], mask=g["mask"][gid],
             level_names=g["names"][gid], level_cls=g["cls"][gid],
             weight_cls=self._g_wcls[gid], macro_kb=blk[:, 0],
             capacity_kb=blk[:, 1], bus_bits=blk[:, 2],

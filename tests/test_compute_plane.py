@@ -1,0 +1,250 @@
+"""Precision-aware compute plane (DESIGN.md §10).
+
+Covers the ``ComputeSpec`` archetypes (lane splitting, per-precision MAC
+energy), the INT8 anchor invariant (precision terms exactly zero / one at
+8-bit operands, so int8 pricing is bit-identical to the fixed-datapath
+model), scalar-vs-columnar lockstep at non-int8 corners, the quant sweep's
+compute-side energy AND latency deltas on the sequential engines, chunked
+``LatticePricer`` parity on a precision x engine space, and the kernel
+calibration fit that supplies the two fitted constants.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ConvLayerSpec
+from repro.core import columns, dataflow as dfl, devices as dev, energy
+from repro.core import experiment as xp
+from repro.core.archspec import ARCHS, get_arch
+from repro.core.dataflow import map_workload
+from repro.core.energy import price
+from repro.core.space import DesignPoint, DesignSpace
+from repro.search import evaluate_stream
+
+
+def _arch(name):
+    if name in ("cpu", "xr-npe"):
+        return get_arch(name)
+    return get_arch(name, pe_config="v2")
+
+
+def _specs(weight_bits=8, act_bits=8):
+    return [
+        ConvLayerSpec("c1", "conv", 16, 32, 3, 1, (16, 16),
+                      weight_bits=weight_bits, act_bits=act_bits),
+        ConvLayerSpec("dw", "dwconv", 32, 32, 3, 1, (16, 16),
+                      weight_bits=weight_bits, act_bits=act_bits),
+        ConvLayerSpec("fc", "dense", 128, 10, 1, 1, (1, 1),
+                      weight_bits=weight_bits, act_bits=act_bits),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ComputeSpec archetypes
+# ---------------------------------------------------------------------------
+
+def test_systolic_lane_split():
+    cs = dev.COMPUTE_ARCHETYPES["systolic"]
+    assert cs.macs_per_pe_per_cycle(8, 8) == 1.0        # the anchor
+    assert cs.macs_per_pe_per_cycle(4, 4) == 2.0        # int4: 2 lanes
+    assert cs.macs_per_pe_per_cycle(4, 8) == 1.0        # widest operand rules
+    assert cs.macs_per_pe_per_cycle(16, 16) == 0.5      # double-pumped
+    # non-power-of-two width: 12b needs ceil(12/8)=2 passes of the 8b lane
+    assert cs.macs_per_pe_per_cycle(12, 12) == 0.5
+
+
+def test_cpu_simd_lane_split():
+    cs = dev.COMPUTE_ARCHETYPES["cpu-simd"]
+    assert cs.lane_bits == 64
+    assert cs.macs_per_pe_per_cycle(8, 8) == 1.0        # normalized anchor
+    assert cs.macs_per_pe_per_cycle(4, 4) == 2.0        # 16 vs 8 lanes
+    assert cs.macs_per_pe_per_cycle(16, 16) == 0.5
+
+
+def test_xr_npe_two_dim_split():
+    """XR-NPE-style 2D split: weight and activation lanes multiply."""
+    cs = dev.COMPUTE_ARCHETYPES["xr-npe"]
+    assert cs.two_dim
+    assert cs.macs_per_pe_per_cycle(8, 8) == 1.0
+    assert cs.macs_per_pe_per_cycle(4, 8) == 2.0        # w4a8 already wins
+    assert cs.macs_per_pe_per_cycle(4, 4) == 4.0
+    assert cs.macs_per_pe_per_cycle(16, 16) == 0.25
+
+
+def test_mac_energy_per_precision():
+    e8 = dev.mac_energy_pj(45, "systolic", 8)
+    assert e8 == dev.MAC_INT8_PJ_45                     # exact at the anchor
+    e4 = dev.mac_energy_pj(45, "systolic", 4)
+    e16 = dev.mac_energy_pj(45, "systolic", 16)
+    assert e4 < e8 < e16                                # quadratic mul term
+    # mixed corner sits between the symmetric ones
+    e48 = dev.mac_energy_pj(45, "systolic", (4, 8))
+    assert e4 < e48 < e8
+    # cpu pays the issue overhead, shrunk by lane splitting
+    c8 = dev.mac_energy_pj(45, "cpu", 8)
+    c4 = dev.mac_energy_pj(45, "cpu", 4)
+    assert c8 > e8
+    assert c8 - e8 == pytest.approx(dev.CPU_OP_OVERHEAD_PJ_45)
+    assert c4 - e4 < c8 - e8                            # 2 lanes share issue
+
+
+# ---------------------------------------------------------------------------
+# INT8 anchor invariant + geometry columns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_name", ["simba", "eyeriss", "cpu", "xr-npe"])
+def test_int8_anchor_geometry_exact(arch_name):
+    """At int8 the geometry columns are EXACTLY neutral: 0 / 1 / 0."""
+    tab = columns.TrafficTable.map_specs(_specs(), _arch(arch_name))
+    assert tab.mul_frac == 0.0
+    assert tab.issue_ratio == 1.0
+    assert tab.dlvw_frac == 0.0
+
+
+def test_nonint8_geometry_values():
+    tab = columns.TrafficTable.map_specs(_specs(4, 8), _arch("simba"))
+    assert tab.mul_frac == pytest.approx(4 * 8 / 64.0 - 1.0)      # -0.5
+    assert tab.dlvw_frac == pytest.approx((4 + 8) / 16.0 - 1.0)   # -0.25
+    assert tab.issue_ratio == 1.0          # systolic: widest operand is 8b
+    npe = columns.TrafficTable.map_specs(_specs(4, 8), _arch("xr-npe"))
+    assert npe.issue_ratio == pytest.approx(0.5)                  # 2 lanes
+
+
+@pytest.mark.parametrize("arch_name", ["simba", "eyeriss", "cpu", "xr-npe"])
+@pytest.mark.parametrize("bits", [(4, 8), (4, 4), (16, 16)])
+def test_scalar_columnar_lockstep_nonint8(arch_name, bits):
+    """The aggregated scalar pricer and the columnar plan agree at every
+    precision corner, not just the anchor."""
+    specs = _specs(*bits)
+    base = _arch(arch_name)
+    ref = price(map_workload(specs, base), base, 7, "rand", "sram", "sram")
+    point = DesignPoint(workload="rand", arch=arch_name, node=7,
+                        variant="sram", nvm="sram",
+                        weight_bits=bits[0], act_bits=bits[1])
+    tt = columns.TrafficTable.map_specs(specs, base)
+    row = energy.price_space([tt], [0], [point], ["sram"]).row(0)
+    for attr in ("compute_pj", "delivery_pj", "total_pj", "latency_s"):
+        assert math.isclose(getattr(row, attr), getattr(ref, attr),
+                            rel_tol=1e-9, abs_tol=1e-18), (arch_name, attr)
+
+
+def test_compute_cycles_follow_lane_split():
+    """int4 halves/quarters compute cycles exactly per archetype."""
+    for name, gain in (("simba", 2.0), ("cpu", 2.0), ("xr-npe", 4.0)):
+        arch = _arch(name)
+        c8 = sum(a.compute_cycles for a in map_workload(_specs(), arch))
+        c4 = sum(a.compute_cycles for a in map_workload(_specs(4, 4), arch))
+        assert c4 == pytest.approx(c8 / gain)
+
+
+# ---------------------------------------------------------------------------
+# quant sweep: compute-side deltas on the sequential engines
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quant_rows():
+    rows = xp.SWEEPS["quant"].rows()
+    return {(r["workload"], r["arch"], r["variant"], r["precision"]): r
+            for r in rows if r["device"] is None}
+
+
+def test_quant_engines_axis():
+    assert xp.QUANT_ENGINES[:2] == xp.SYSTOLICS      # frozen oracle order
+    assert "cpu" in xp.QUANT_ENGINES and "xr-npe" in xp.QUANT_ENGINES
+
+
+def test_quant_sweep_compute_energy_deltas(quant_rows):
+    for arch in xp.QUANT_ENGINES:
+        r8 = quant_rows[("detnet", arch, "sram", "int8")]
+        r48 = quant_rows[("detnet", arch, "sram", "w4a8")]
+        r4 = quant_rows[("detnet", arch, "sram", "int4")]
+        assert r4["energy_uj"] < r48["energy_uj"] < r8["energy_uj"]
+
+
+def test_quant_sweep_compute_latency_deltas(quant_rows):
+    """Lane splitting moves LATENCY on the compute-bound sequential
+    engines (the systolic XR points stay memory-bound)."""
+    r8 = quant_rows[("detnet", "cpu", "sram", "int8")]
+    r4 = quant_rows[("detnet", "cpu", "sram", "int4")]
+    assert r4["latency_ms"] == pytest.approx(r8["latency_ms"] / 2.0)
+    n8 = quant_rows[("detnet", "xr-npe", "sram", "int8")]
+    n48 = quant_rows[("detnet", "xr-npe", "sram", "w4a8")]
+    n4 = quant_rows[("detnet", "xr-npe", "sram", "int4")]
+    assert n48["latency_ms"] == pytest.approx(n8["latency_ms"] / 2.0)
+    assert n4["latency_ms"] == pytest.approx(n8["latency_ms"] / 4.0)
+    # xr-npe == cpu at the anchor (same geometry, same anchor throughput)
+    assert n8["energy_uj"] == r8["energy_uj"]
+    assert n8["latency_ms"] == r8["latency_ms"]
+
+
+# ---------------------------------------------------------------------------
+# streaming parity on a precision x engine space
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", [1, 7, 27])
+def test_stream_chunk_parity_precision_engines(chunk_size):
+    ev = xp.Evaluator()
+    space = DesignSpace.product_iter(
+        "quant-lattice", workload="detnet",
+        arch=("simba", "cpu", "xr-npe"), node=7,
+        variant=("sram", "p0", "p1"),
+        precision=xp.QUANT_CORNERS)
+    points = list(space)
+    assert len(points) == 27
+    one = ev.evaluate_table(points)
+    off = 0
+    for ch in evaluate_stream(ev, space, chunk_size=chunk_size):
+        s = slice(off, off + len(ch))
+        assert np.array_equal(ch.energy.total_pj, one.total_pj[s])
+        assert np.array_equal(ch.energy.latency_s, one.latency_s[s])
+        assert np.array_equal(ch.energy.edp, one.edp[s])
+        off += len(ch)
+    assert off == len(points)
+
+
+# ---------------------------------------------------------------------------
+# calibration: fitted constants + the checked-in JSON contract
+# ---------------------------------------------------------------------------
+
+def test_fit_constants_recovers_known_line():
+    from repro.calibrate.harness import CalSample, fit_constants
+    # synthetic corners on an exact line: bytes/mac = 2*(w+a)/16 + 1
+    def sample(kern, prec, w, a, macs, flops):
+        bpm = 2.0 * (w + a) / 16.0 + 1.0
+        return CalSample(kern, prec, w, a, macs, flops,
+                         bpm * macs, bpm * macs, 0.0)
+    samples = [sample("int8_matmul", "int8", 8, 8, 1000, 2000.0),
+               sample("depthwise_conv", "bf16", 16, 16, 500, 1000.0),
+               sample("depthwise_conv", "fp32", 32, 32, 500, 1000.0),
+               sample("quantize", "w32a8", 32, 8, 400, 800.0)]
+    constants, residuals = fit_constants(samples)
+    assert constants["delivery_width_frac"] == pytest.approx(2.0 / 3.0)
+    assert constants["mac_mul_share"] == pytest.approx(64.0 / 96.0)
+    assert residuals["delivery_fit_rel_err"] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_load_calibrated_fallback_and_checked_in_json():
+    defaults = dev.load_calibrated("/nonexistent/calibrated.json")
+    assert defaults == dev._CALIBRATED_DEFAULTS
+    with open(dev._CALIB_PATH) as f:
+        data = json.load(f)
+    assert dev.CALIBRATED == {**dev._CALIBRATED_DEFAULTS,
+                              **data["constants"]}
+    assert 0.0 < dev.CALIBRATED["delivery_width_frac"] < 1.0
+    assert 0.0 < dev.CALIBRATED["mac_mul_share"] <= 1.0
+    # the module constants are bound to the calibrated values
+    assert dev.MAC_MUL_PJ_45 == (dev.CALIBRATED["mac_mul_share"]
+                                 * dev.MAC_INT8_PJ_45)
+    assert dfl.DELIVERY_WIDTH_FRAC == dev.CALIBRATED["delivery_width_frac"]
+
+
+def test_units_parse_compute_plane_names():
+    from repro.analysis import units
+    assert units.parse_name("macs_per_cycle").dimensionless
+    assert units.parse_name("macs_per_pe_per_cycle").dimensionless
+    assert str(units.parse_name("delivery_pj_per_mac_45")) == "1e-12*J"
+    assert units.parse_name("delivery_width_frac").dimensionless
+    assert units.parse_name("read_cycles").dimensionless

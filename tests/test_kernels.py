@@ -134,3 +134,35 @@ def test_quantize_roundtrip_property(rng):
         assert bool(jnp.all(s > 0))
 
     inner()
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode knob (kernels/_compat.py): the CI-without-TPU fallback
+# ---------------------------------------------------------------------------
+
+def test_interpret_default_env_override(monkeypatch):
+    from repro.kernels import _compat
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert _compat.interpret_default() is True
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "off")
+    assert _compat.interpret_default() is False
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET")
+    # unset: backend autodetect (CPU in this container -> interpret)
+    assert _compat.interpret_default() == (jax.default_backend() == "cpu")
+
+
+def test_kernel_parity_through_interpret_knob(rng, monkeypatch):
+    """int8_matmul / depthwise_conv vs the ref.py oracles with interpret
+    mode FORCED via the knob (the calibration-harness execution path)."""
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "true")
+    a = jnp.asarray(rng.integers(-127, 128, (128, 256)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (256, 128)), jnp.int8)
+    sa = jnp.asarray(rng.uniform(1e-3, 1e-2, (128,)), jnp.float32)
+    sb = jnp.asarray(rng.uniform(1e-3, 1e-2, (128,)), jnp.float32)
+    np.testing.assert_allclose(ops.int8_matmul(a, b, sa, sb),
+                               ref.int8_matmul(a, b, sa, sb), rtol=1e-6)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 128)), jnp.float32)
+    np.testing.assert_allclose(ops.depthwise_conv3x3(x, w),
+                               ref.depthwise_conv3x3(x, w),
+                               rtol=1e-5, atol=1e-5)

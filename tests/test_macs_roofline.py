@@ -1,0 +1,53 @@
+"""Cross-check the DSE workload MAC counts against the executable models.
+
+Each XR config's per-layer ``ConvLayerSpec.macs`` (summed over the suite)
+must agree with XLA's ``cost_analysis()`` FLOPs/2 on the jitted forward
+pass — the same counter the roofline module consumes (see
+``roofline.from_compiled``). The tolerance absorbs the non-MAC
+elementwise work (BN folds, activations, heads) that the jitted graph
+carries but the MAC model deliberately excludes.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import xr
+from repro.models.params import materialize
+
+REL_TOL = 0.12          # measured: detnet 1.039, edsnet 0.995 (full configs)
+
+
+@pytest.fixture(scope="module", params=["detnet", "edsnet"])
+def measured(request):
+    """(workload, analytic MACs, compiled FLOPs) for the full config."""
+    name = request.param
+    cfg = get_config(name)
+    pdefs, sdefs = xr.param_defs(cfg)
+    params = materialize(pdefs, jax.random.key(0))
+    state = materialize(sdefs, jax.random.key(1))
+    img = jnp.zeros((1, *cfg.input_hw, cfg.in_channels))
+    f = jax.jit(lambda p, s, x: xr.forward(cfg, p, s, x, train=False)[0])
+    ca = f.lower(params, state, img).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    macs = sum(s.macs for s in xr.conv_layer_specs(cfg))
+    return name, macs, float(ca.get("flops", 0.0))
+
+
+def test_macs_match_cost_analysis_flops(measured):
+    name, macs, flops = measured
+    assert flops > 0, f"{name}: cost_analysis reported no flops"
+    ratio = (flops / 2.0) / macs
+    assert abs(ratio - 1.0) <= REL_TOL, (name, macs, flops, ratio)
+
+
+def test_per_layer_macs_positive_and_dominant(measured):
+    """The conv layers carry (essentially) all of the model's FLOPs: no
+    spec may be zero/negative and the summed MACs may not exceed the
+    compiled FLOP budget by more than the tolerance either way."""
+    name, macs, flops = measured
+    cfg = get_config(name)
+    specs = xr.conv_layer_specs(cfg)
+    assert all(s.macs > 0 for s in specs)
+    assert macs <= (flops / 2.0) * (1.0 + REL_TOL)

@@ -1,14 +1,25 @@
-"""Calibration probe: component breakdown for the Table-3 cells + targets.
+"""Calibration probes.
 
-Run:  PYTHONPATH=src python tools/calibrate.py
+Default mode: component breakdown for the Table-3 cells + Table-2 areas
+against the paper's targets, evaluated on the ``Evaluator``/columnar path
+(the ``dse.*`` shims are no longer involved).
+
+Kernel mode (``--kernels``): run the Pallas-kernel measurement harness
+(``repro.calibrate``) that fits the compute-plane constants
+(DESIGN.md §10) in interpret mode; ``--write`` refreshes the checked-in
+``src/repro/calibrate/calibrated.json``, ``--check`` gates on fit-residual
+regression against it.
+
+Run:  PYTHONPATH=src python tools/calibrate.py [--kernels [--write|--check]]
 """
+import argparse
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import dse, nvm as nvm_mod
-from repro.core.energy import EnergyReport
+from repro.core import experiment as xp
+from repro.core import nvm as nvm_mod
 
 TARGETS_T3 = {  # (workload, arch) -> (p0_sav, p1_sav, p0_lat_ms, p1_lat_ms)
     ("detnet", "simba"): (0.27, 0.31, 0.34, 0.42),
@@ -22,11 +33,17 @@ TARGETS_T2 = {  # arch -> (sram, p0, p1) mm^2
 }
 
 
+def _report(workload, arch, node, variant):
+    return xp.default_evaluator().report(
+        xp.DesignPoint(workload=workload, arch=arch, node=node,
+                       variant=variant))
+
+
 def probe(w, a, node=7):
-    ips = dse.IPS_MIN[w]
-    sram = dse.evaluate(w, a, node, "sram")
-    p0 = dse.evaluate(w, a, node, "p0")
-    p1 = dse.evaluate(w, a, node, "p1")
+    ips = xp.IPS_MIN[w]
+    sram = _report(w, a, node, "sram")
+    p0 = _report(w, a, node, "p0")
+    p1 = _report(w, a, node, "p1")
     ps = nvm_mod.memory_power_w(sram, ips)
     t = TARGETS_T3[(w, a)]
     print(f"\n--- {w} / {a} @ IPS={ips} (targets p0={t[0]:+.0%} p1={t[1]:+.0%} "
@@ -43,12 +60,50 @@ def probe(w, a, node=7):
         print(f"  [{name:4s}] lat={r.latency_s*1e3:8.2f}ms bottleneck={r.bottleneck:10s} {lv}")
 
 
-for w in ("detnet", "edsnet"):
-    for a in ("simba", "eyeriss"):
-        probe(w, a)
+def tables():
+    for w in ("detnet", "edsnet"):
+        for a in ("simba", "eyeriss"):
+            probe(w, a)
 
-print("\n=== Table 2 ===")
-for r in dse.table2_area():
-    t = TARGETS_T2[r["arch"]]
-    print(f"{r['arch']:8s} sram={r['sram_mm2']:.2f} (t {t[0]})  p0={r['p0_mm2']:.2f} (t {t[1]})"
-          f"  p1={r['p1_mm2']:.2f} (t {t[2]})  sav {r['p0_savings']:.1%}/{r['p1_savings']:.1%}")
+    print("\n=== Table 2 ===")
+    for r in xp.SWEEPS["table2"].rows():
+        t = TARGETS_T2[r["arch"]]
+        print(f"{r['arch']:8s} sram={r['sram_mm2']:.2f} (t {t[0]})  p0={r['p0_mm2']:.2f} (t {t[1]})"
+              f"  p1={r['p1_mm2']:.2f} (t {t[2]})  sav {r['p0_savings']:.1%}/{r['p1_savings']:.1%}")
+
+
+def kernels(write=False, do_check=False):
+    from repro import calibrate as cal
+    if do_check:
+        fails = cal.check()
+        for f in fails:
+            print("FAIL:", f)
+        print("calibrate --kernels --check:", "FAIL" if fails else "OK")
+        return 1 if fails else 0
+    data = cal.write_calibrated() if write else cal.run_calibration()
+    print("=== kernel calibration"
+          + (f" (wrote {cal.CALIB_PATH})" if write else "") + " ===")
+    for k, v in sorted(data["constants"].items()):
+        print(f"  {k:22s} = {v:.6f}")
+    for k, v in sorted(data["residuals"].items()):
+        print(f"  residual {k:22s} = {v:.6g}")
+    for s in data["samples"]:
+        print(f"  [{s['kernel']:14s} {s['precision']:5s}] w{s['weight_bits']:<2d} "
+              f"a{s['act_bits']:<2d} macs={s['macs']:>8d} flops={s['flops']:>9.0f} "
+              f"bytes={s['bytes_accessed']:>8.0f} (analytic {s['analytic_bytes']:>7.0f}) "
+              f"ref_err={s['max_abs_err']:.3g}")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the Pallas-kernel calibration harness")
+    ap.add_argument("--write", action="store_true",
+                    help="with --kernels: refresh calibrated.json")
+    ap.add_argument("--check", action="store_true",
+                    help="with --kernels: gate on fit-residual regression")
+    args = ap.parse_args()
+    if args.kernels:
+        sys.exit(kernels(write=args.write, do_check=args.check))
+    tables()
