@@ -1,0 +1,124 @@
+"""Trace-simulation hot-path timing: per-window cost vs the system cell.
+
+A trace simulation prices W constant-rate windows of S systems in ONE
+vectorized roll-up (``schedule.window_rollup`` — the window axis is
+flattened into W*S virtual systems and pushed through the same bincount
+roll-up steady-state pricing uses). The window axis must therefore cost
+roll-up arithmetic ONLY: the expensive rate-independent work (columnar
+``EnergyTable`` pricing, reload energies) is shared across windows.
+
+Two cells over the SAME 256-placement Simba lattice (the XR bundle,
+PR 5's system cell from bench_gridsearch):
+
+  * system cell — ``ev.system_table(space)``: steady state, 1 window.
+  * trace cell  — the gaming scenario (8 canonical windows) through
+    ``ev.trace_table``: windows x placements in one batched pass.
+
+The gate ratio is the per-(window x system) cost of the trace cell over
+the per-system cost of the system cell. Batched window pricing amortizes
+the EnergyTable across windows, so this sits WELL below 1.0; a per-window
+Python ``SystemPoint`` loop leaking into the hot path pushes it past 1.0
+and trips the gate.
+
+    PYTHONPATH=src python benchmarks/bench_trace.py [--repeat 5]
+        [--check benchmarks/baseline_trace.json]
+        [--write-baseline benchmarks/baseline_trace.json]
+
+``--check`` fails (exit 1) when the ratio regresses by more than 2x vs
+the committed baseline (ratios are machine-independent; absolute ms are
+recorded for reference only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.experiment import Evaluator, system_space
+from repro.trace import get_scenario
+
+
+def measure(repeat: int = 5):
+    ev = Evaluator(cache_reports=False)
+    space = list(system_space(arch="simba", node=7))
+    scenario = get_scenario("gaming")
+
+    # warm the structural/plan caches outside the timed region (shared by
+    # both cells: trace and steady state reuse ONE geometry cache entry)
+    ev.system_table(space)
+    tab = ev.trace_table(space, scenario)
+    n_windows, n_systems = tab.n_windows, len(space)
+
+    def best_of(fn):
+        times = []
+        for _ in range(repeat):
+            t0 = time.monotonic()
+            fn()
+            times.append(time.monotonic() - t0)
+        return min(times)
+
+    t_sys = best_of(lambda: ev.system_table(space))
+    t_trace = best_of(lambda: ev.trace_table(space, scenario))
+
+    per_system = t_sys / n_systems
+    per_window_system = t_trace / (n_windows * n_systems)
+    return dict(
+        systems=n_systems,
+        windows=n_windows,
+        system_ms=t_sys * 1e3,
+        trace_ms=t_trace * 1e3,
+        us_per_system=per_system * 1e6,
+        us_per_window_system=per_window_system * 1e6,
+        # the gate: batched window pricing shares the columnar EnergyTable
+        # across windows, so a (window x system) cell must cost LESS than
+        # a steady-state system cell — a per-window Python loop breaks this
+        ratio_window_vs_system_cell=per_window_system / per_system,
+    )
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--repeat", type=int, default=5,
+                   help="timing passes per cell (min is reported)")
+    p.add_argument("--check", metavar="BASELINE_JSON",
+                   help="fail on >2x regression of the per-window/"
+                        "per-system cost ratio vs the committed baseline")
+    p.add_argument("--write-baseline", metavar="BASELINE_JSON",
+                   help="record this run as the committed baseline")
+    a = p.parse_args()
+
+    m = measure(repeat=a.repeat)
+    print(f"system cell ({m['systems']} systems):          "
+          f"{m['system_ms']:8.2f} ms  ({m['us_per_system']:.1f} us/system)")
+    print(f"trace cell ({m['windows']} windows x {m['systems']}): "
+          f"{m['trace_ms']:8.2f} ms  "
+          f"({m['us_per_window_system']:.1f} us/(window x system))")
+    print(f"per-window vs per-system cost ratio: "
+          f"{m['ratio_window_vs_system_cell']:.3f}")
+
+    if a.write_baseline:
+        with open(a.write_baseline, "w") as f:
+            json.dump(m, f, indent=1)
+        print(f"baseline written to {a.write_baseline}")
+    if a.check:
+        with open(a.check) as f:
+            base = json.load(f)
+        base_r = base["ratio_window_vs_system_cell"]
+        # sub-ms cells are noisy; clamp the reference so the gate only
+        # trips on a genuine (multi-x) hot-path regression
+        ceil = max(base_r, 0.5) * 2.0
+        got = m["ratio_window_vs_system_cell"]
+        print(f"check: per-window vs per-system ratio {got:.3f} "
+              f"(baseline {base_r:.3f}, ceiling {ceil:.3f})")
+        if got > ceil:
+            print("FAIL: >2x regression of the batched window-pricing cell")
+            sys.exit(1)
+        print("OK")
+
+
+if __name__ == "__main__":
+    main()

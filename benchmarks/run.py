@@ -54,6 +54,49 @@ def calibrate_smoke():
                   f"max residual {resid:.3g}, 0 regressions")
 
 
+def trace_smoke():
+    """Trace-driven simulation (repro.trace) timed like a figure: simulate
+    the gaming scenario on the paper corners (both contention modes),
+    export the Chrome tracing JSON and fail the smoke unless the document
+    loads and EVERY event carries ph/ts/pid/tid (the Perfetto contract)."""
+    import json
+    import os
+    import tempfile
+
+    from repro.core import schedule
+    from repro.core.experiment import Evaluator, XR_BUNDLE
+    from repro.trace import get_scenario, simulate, write_chrome_trace
+    from repro.trace.chrometrace import validate_events
+
+    ev = Evaluator(cache_reports=False)
+    pts = [schedule.SystemPoint(XR_BUNDLE, "simba", 7, variant=v, mode=m)
+           for v in ("sram", "p0", "p1") for m in schedule.MODES]
+    tab = simulate(ev, pts, get_scenario("gaming"))
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        write_chrome_trace(tab, path)
+        with open(path) as f:
+            doc = json.load(f)
+    finally:
+        os.unlink(path)
+    errs = validate_events(doc)
+    for e in doc["traceEvents"]:
+        missing = {"ph", "ts", "pid", "tid"} - set(e)
+        if missing:
+            errs.append(f"event missing {sorted(missing)}: {e}")
+    if errs:
+        raise SystemExit("trace_smoke: invalid Chrome trace:\n"
+                         + "\n".join(errs[:20]))
+    rows = [dict(placement=p.variant, mode=p.mode,
+                 battery_h=float(tab.battery_h[i]),
+                 peak_mw=float(tab.peak_p_total_w[i]) * 1e3,
+                 miss_windows=int(tab.miss_windows[i]))
+            for i, p in enumerate(tab.points)]
+    return rows, (f"{len(pts)} systems x {tab.n_windows} windows, "
+                  f"{len(doc['traceEvents'])} events, 0 violations")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", default=None)
@@ -64,7 +107,7 @@ def main() -> None:
     all_rows = {}
     print("name,us_per_call,derived")
     fns = list(paper.ALL) + [roofline_table.roofline_table, analysis_smoke,
-                             calibrate_smoke]
+                             calibrate_smoke, trace_smoke]
     for fn in fns:
         t0 = time.monotonic()
         rows, derived = fn()

@@ -178,3 +178,35 @@ for i, (edp, pmem) in zip(*arc.frontier()):
     print(f"  {p.arch:8s} {p.node:2d}nm {p.variant:<44s} "
           f"{p.precision_label:5s} edp={edp:.2e} J*s  "
           f"P_mem={pmem*1e6:.1f} uW")
+
+# Trace-driven dynamic simulation (repro.trace, DESIGN.md §11): price an
+# XR scenario — a timeline of per-stream rate changes — as batched
+# constant-rate windows, and fold into the numbers steady state can't
+# see: peak/p99 power, deadline misses, battery life. A constant-rate
+# scenario reproduces the steady-state SystemPoint report byte-for-byte.
+from repro.core.schedule import SystemPoint
+from repro.core.experiment import XR_BUNDLE
+from repro.trace import get_scenario, simulate
+
+scenario = get_scenario("gaming")       # idle | gaming | passthrough | multi_user
+corners = [SystemPoint(XR_BUNDLE, "simba", 7, variant=v, mode="reload")
+           for v in ("sram", "p0", "p1")]
+ttab = simulate(ev, corners, scenario)  # all windows x systems, one pass
+print(f"\n=== trace: {scenario.name} ({scenario.duration_s:g}s, "
+      f"{ttab.n_windows} windows, {ttab.battery_mah:g} mAh) ===")
+for i, p in enumerate(ttab.points):
+    r = ttab.report(i)
+    print(f"  {p.variant:4s}: avg {r.avg_p_total_w*1e3:6.3f} mW  "
+          f"peak {r.peak_p_total_w*1e3:6.3f} mW  "
+          f"p99 {r.p99_p_total_w*1e3:6.3f} mW  "
+          f"misses {r.miss_windows}  battery {r.battery_h:7.1f} h")
+
+# The scenario sweep ranks the full 256-placement lattice by battery
+# life (tools/trace.py --sweep is the CLI; --trace-out exports a
+# Perfetto-loadable Chrome trace of any simulation).
+trows = SWEEPS["trace"].rows(ev, scenario="idle")
+best, worst = trows[0], trows[-1]
+print(f"\nidle-scenario battery life: best {best['placement']} "
+      f"{best['battery_h']:.0f} h vs worst {worst['placement']} "
+      f"{worst['battery_h']:.0f} h "
+      f"(+{best['battery_h']/worst['battery_h']-1:.0%})")

@@ -5,8 +5,8 @@ runs the four checkers; ``main`` wraps it with baseline handling:
 
 * default       — print every finding with its baseline status
 * ``--check``   — exit 2 if any finding is not in the baseline
-* ``--write-baseline`` — accept the current findings into the baseline
-  (edit the file afterwards to record per-entry justifications)
+* ``--write-baseline`` — accept the current findings into the baseline;
+  NEW entries require ``--justify`` with a real (non-TODO) justification
 * ``--json``    — machine-readable output
 """
 from __future__ import annotations
@@ -22,6 +22,20 @@ from repro.analysis.findings import Baseline, Finding
 from repro.analysis.project import Project
 
 _SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
+
+
+def validate_justification(text: Optional[str]) -> str:
+    """A baseline justification must be real prose: non-empty and not a
+    TODO placeholder (the tests hold justification-not-TODO for the
+    checked-in baseline, so a placeholder would fail CI later anyway).
+    Returns the stripped text; raises ``ValueError`` otherwise."""
+    if text is None or not text.strip():
+        raise ValueError("baseline justification must be non-empty")
+    text = text.strip()
+    if "TODO" in text.upper().replace(" ", ""):
+        raise ValueError(f"baseline justification must not be a TODO "
+                         f"placeholder, got {text!r}")
+    return text
 
 
 def _default_roots():
@@ -68,7 +82,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero on any non-baselined finding")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="accept current findings into the baseline file")
+                    help="accept current findings into the baseline file "
+                         "(new entries require --justify)")
+    ap.add_argument("--justify", metavar="TEXT",
+                    help="justification recorded on NEW baseline entries; "
+                         "must be real prose, not empty/TODO")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit findings as JSON")
     args = ap.parse_args(argv)
@@ -79,14 +97,28 @@ def main(argv: Optional[List[str]] = None) -> int:
     new, suppressed, stale = baseline.split(findings)
 
     if args.write_baseline:
-        merged = Baseline.from_findings(
-            findings, justification="TODO: justify or fix")
+        if new:
+            if args.justify is None:
+                print(f"error: --write-baseline would accept {len(new)} NEW "
+                      f"finding(s); pass --justify with a real "
+                      f"justification for them", file=sys.stderr)
+                return 2
+            try:
+                justification = validate_justification(args.justify)
+            except ValueError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+        else:
+            justification = args.justify or ""
+        merged = Baseline.from_findings(findings,
+                                        justification=justification)
         # keep existing justifications for entries that persist
         for fp, entry in baseline.entries.items():
             if fp in merged.entries:
                 merged.entries[fp] = entry
         merged.save(args.baseline)
-        print(f"wrote {len(merged.entries)} entries to {args.baseline}")
+        print(f"wrote {len(merged.entries)} entries to {args.baseline} "
+              f"({len(new)} new)")
         return 0
 
     if args.as_json:

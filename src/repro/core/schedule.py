@@ -61,8 +61,10 @@ cached entry points.
 """
 from __future__ import annotations
 
+import math
+from collections import Counter
 from dataclasses import dataclass, replace
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -94,6 +96,9 @@ class Stream:
     def __post_init__(self):
         if not self.ips > 0.0:
             raise ValueError(f"Stream({self.name!r}): ips must be > 0, "
+                             f"got {self.ips!r}")
+        if not math.isfinite(self.ips):
+            raise ValueError(f"Stream({self.name!r}): ips must be finite, "
                              f"got {self.ips!r}")
         if isinstance(self.extract_kw, dict):
             object.__setattr__(self, "extract_kw",
@@ -145,6 +150,15 @@ class SystemPoint:
             object.__setattr__(self, "streams", tuple(self.streams))
         if not self.streams:
             raise ValueError("SystemPoint needs at least one stream")
+        dups = [n for n, c in Counter(s.name for s in self.streams).items()
+                if c > 1]
+        if dups:
+            # two same-name streams would alias in reload accounting and in
+            # every by-name roll-up (scenario rates, trace tracks)
+            raise ValueError(
+                f"SystemPoint: duplicate stream workload name(s) "
+                f"{sorted(dups)!r} — each stream must be a distinct "
+                f"workload")
         if self.mode not in MODES:
             raise ValueError(f"SystemPoint: unknown mode {self.mode!r} "
                              f"(one of {MODES})")
@@ -298,17 +312,25 @@ def reload_energy_j(geom: SystemGeometry,
     return (write_pj + stage_pj) * 1e-12
 
 
-def switch_rate(geom: SystemGeometry) -> np.ndarray:
-    """(R,) context switches INTO each stream per second.
+def switch_rate_at(sys_idx: np.ndarray, ips: np.ndarray,
+                   is_union_rows: np.ndarray, n_systems: int) -> np.ndarray:
+    """(R',) context switches INTO each stream row per second at the given
+    rates.
 
     A batching scheduler runs each stream's due inferences back to back:
     stream i is switched into ``min(ips_i, sum_{j != i} ips_j)`` times per
     second (a single stream is never switched — the single-stream parity
-    anchor). Union-mode streams stay resident: rate 0."""
-    total = np.bincount(geom.sys_idx, weights=geom.ips,
-                        minlength=geom.n_systems)
-    rate = np.minimum(geom.ips, total[geom.sys_idx] - geom.ips)
-    return np.where(geom.is_union[geom.sys_idx], 0.0, np.maximum(0.0, rate))
+    anchor; a stream idle this window, ips=0, is never switched INTO).
+    Union-mode streams stay resident: rate 0."""
+    total = np.bincount(sys_idx, weights=ips, minlength=n_systems)
+    rate = np.minimum(ips, total[sys_idx] - ips)
+    return np.where(is_union_rows, 0.0, np.maximum(0.0, rate))
+
+
+def switch_rate(geom: SystemGeometry) -> np.ndarray:
+    """(R,) switch rates at the geometry's own steady-state stream rates."""
+    return switch_rate_at(geom.sys_idx, geom.ips,
+                          geom.is_union[geom.sys_idx], geom.n_systems)
 
 
 @dataclass(frozen=True)
@@ -395,21 +417,25 @@ class SystemReport:
         return self.p_mem_w
 
 
-def price(geom: SystemGeometry) -> SystemTable:
-    """Roll per-stream ``EnergyTable`` rows up to system memory power.
+def _rollup(sys_idx: np.ndarray, ips: np.ndarray, is_union_rows: np.ndarray,
+            S: int, e_mem_j: np.ndarray, e_compute_j: np.ndarray,
+            latency_s: np.ndarray, standby_w: np.ndarray,
+            wake_j: np.ndarray, rel_j: np.ndarray) -> Dict[str, np.ndarray]:
+    """The time-multiplexing roll-up at EXPLICIT per-row rates.
 
-    Device constants are re-read on every call (the energy pricing, unit
-    write costs and the staging constant), so calibration tools may mutate
-    ``core.devices`` between calls and reuse a cached geometry."""
-    table = columns.price(geom.plan)
-    S = geom.n_systems
-    ips = geom.ips
-    e_mem_j = table.mem_pj * 1e-12
-    stream_duty = ips * table.latency_s
-    stream_dyn = ips * e_mem_j
-    duty = np.bincount(geom.sys_idx, weights=stream_duty, minlength=S)
-    dyn = np.bincount(geom.sys_idx, weights=stream_dyn, minlength=S)
-    total_ips = np.bincount(geom.sys_idx, weights=ips, minlength=S)
+    All per-stream inputs are row vectors aligned with ``sys_idx`` (which
+    maps row -> virtual system in [0, S)). ``price`` calls this once with
+    the geometry's steady-state rates; ``window_rollup`` calls it with the
+    rows TILED over a window axis — the per-bin accumulation order of each
+    ``bincount`` is then identical to the single-window case, which is what
+    makes a constant-rate trace window byte-identical to the steady-state
+    system report (the trace parity oracle)."""
+    stream_duty = ips * latency_s
+    stream_dyn_w = ips * e_mem_j
+    duty = np.bincount(sys_idx, weights=stream_duty, minlength=S)
+    dyn_w = np.bincount(sys_idx, weights=stream_dyn_w, minlength=S)
+    compute_w = np.bincount(sys_idx, weights=ips * e_compute_j, minlength=S)
+    total_ips = np.bincount(sys_idx, weights=ips, minlength=S)
     idle = np.maximum(0.0, 1.0 - duty)
     feasible = duty <= 1.0
 
@@ -417,19 +443,129 @@ def price(geom: SystemGeometry) -> SystemTable:
     # per-SYSTEM quantities, identical on every stream row — gather from
     # the first row of each system.
     first = np.zeros(S, int)
-    first[geom.sys_idx[::-1]] = np.arange(len(geom.sys_idx))[::-1]
-    standby = table.standby_w[first]
-    wake_j = table.wake_energy_j[first]
+    first[sys_idx[::-1]] = np.arange(len(sys_idx))[::-1]
+    standby_w = standby_w[first]
+    wake_j = wake_j[first]
     wake_rate = total_ips * idle
 
-    sw_rate = switch_rate(geom)
-    rel_j = reload_energy_j(geom, table)
-    reload_w = np.bincount(geom.sys_idx, weights=sw_rate * rel_j,
-                           minlength=S)
+    sw_rate = switch_rate_at(sys_idx, ips, is_union_rows, S)
+    reload_w = np.bincount(sys_idx, weights=sw_rate * rel_j, minlength=S)
 
-    p_mem = dyn + idle * standby + wake_rate * wake_j + reload_w
+    p_mem_w = dyn_w + idle * standby_w + wake_rate * wake_j + reload_w
+    return dict(stream_duty=stream_duty, stream_dyn_w=stream_dyn_w,
+                switch_rate=sw_rate, duty=duty, feasible=feasible,
+                standby_w=standby_w, wake_j=wake_j, wake_rate=wake_rate,
+                dyn_w=dyn_w, compute_w=compute_w, reload_w=reload_w,
+                p_mem_w=p_mem_w)
+
+
+def price(geom: SystemGeometry) -> SystemTable:
+    """Roll per-stream ``EnergyTable`` rows up to system memory power.
+
+    Device constants are re-read on every call (the energy pricing, unit
+    write costs and the staging constant), so calibration tools may mutate
+    ``core.devices`` between calls and reuse a cached geometry."""
+    table = columns.price(geom.plan)
+    rel_j = reload_energy_j(geom, table)
+    c = _rollup(geom.sys_idx, geom.ips, geom.is_union[geom.sys_idx],
+                geom.n_systems, table.mem_pj * 1e-12,
+                table.compute_pj * 1e-12, table.latency_s, table.standby_w,
+                table.wake_energy_j, rel_j)
     return SystemTable(
-        geometry=geom, energy=table, stream_duty=stream_duty,
-        stream_dyn_w=stream_dyn, switch_rate=sw_rate, reload_j=rel_j,
-        duty=duty, feasible=feasible, standby_w=standby, wake_j=wake_j,
-        wake_rate=wake_rate, dyn_w=dyn, reload_w=reload_w, p_mem_w=p_mem)
+        geometry=geom, energy=table, stream_duty=c["stream_duty"],
+        stream_dyn_w=c["stream_dyn_w"], switch_rate=c["switch_rate"],
+        reload_j=rel_j, duty=c["duty"], feasible=c["feasible"],
+        standby_w=c["standby_w"], wake_j=c["wake_j"],
+        wake_rate=c["wake_rate"], dyn_w=c["dyn_w"], reload_w=c["reload_w"],
+        p_mem_w=c["p_mem_w"])
+
+
+# ---------------------------------------------------------------------------
+# window pricing hook (trace-driven simulation; repro.trace)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WindowColumns:
+    """Per-(window, system) roll-up of one geometry at W rate vectors.
+
+    The rate-INDEPENDENT work (columnar ``EnergyTable`` pricing, reload
+    energies) is done once; only the cheap roll-up arithmetic carries the
+    window axis. Shapes: (W, S) per system, (W, R) per stream row, (R,)
+    rate-independent, where R = number of stream rows in the geometry."""
+    geometry: SystemGeometry
+    energy: columns.EnergyTable
+    rates: np.ndarray           # (W, R) the rates each window was priced at
+    reload_j: np.ndarray        # (R,)  energy per switch into the stream
+    stream_duty: np.ndarray     # (W, R)
+    stream_dyn_w: np.ndarray    # (W, R)
+    switch_rate: np.ndarray     # (W, R)
+    duty: np.ndarray            # (W, S)
+    feasible: np.ndarray        # (W, S) bool
+    standby_w: np.ndarray       # (W, S)
+    wake_j: np.ndarray          # (W, S)
+    wake_rate: np.ndarray       # (W, S)
+    dyn_w: np.ndarray           # (W, S)
+    compute_w: np.ndarray       # (W, S) dynamic compute power (battery view)
+    reload_w: np.ndarray        # (W, S)
+    p_mem_w: np.ndarray         # (W, S)
+
+    @property
+    def n_windows(self) -> int:
+        return self.rates.shape[0]
+
+    @property
+    def idle_frac(self) -> np.ndarray:  # (W, S)
+        return np.maximum(0.0, 1.0 - self.duty)
+
+    @property
+    def p_total_w(self) -> np.ndarray:  # (W, S) memory + dynamic compute
+        return self.p_mem_w + self.compute_w
+
+
+def window_rollup(geom: SystemGeometry, rates,
+                  table: Optional[columns.EnergyTable] = None
+                  ) -> WindowColumns:
+    """Price W rate windows of one geometry in ONE vectorized roll-up.
+
+    ``rates`` is (W, R): each row is a full per-stream rate vector (0.0 =
+    the stream is off that window — it contributes no duty, no dynamic
+    energy and is never switched into). Every (window, system) cell is
+    priced exactly as a steady-state system at that window's rates: the
+    window axis is flattened into W*S virtual systems and pushed through
+    the SAME roll-up ``price`` uses, so a window whose rates equal the
+    geometry's steady-state rates reproduces ``price(geom)`` byte-for-byte
+    (the trace parity oracle). The expensive rate-independent columns
+    (``EnergyTable``, reload energies) are computed once, not per window;
+    pass ``table`` to reuse an already-priced EnergyTable."""
+    rates = np.atleast_2d(np.asarray(rates, float))
+    R = len(geom.sys_idx)
+    if rates.shape[1] != R:
+        raise ValueError(f"window_rollup: rates must be (W, {R}) for this "
+                         f"geometry, got {rates.shape}")
+    if (rates < 0.0).any() or not np.isfinite(rates).all():
+        raise ValueError("window_rollup: rates must be finite and >= 0")
+    if table is None:
+        table = columns.price(geom.plan)
+    rel_j = reload_energy_j(geom, table)
+    W = rates.shape[0]
+    S = geom.n_systems
+    # flatten windows to W*S virtual systems: row order within each window
+    # matches the single-window case, so each bincount bin accumulates in
+    # the identical order (bit-identical sums).
+    sys_flat = (np.arange(W)[:, None] * S + geom.sys_idx[None, :]).ravel()
+    tile = lambda col: np.tile(col, W)                      # noqa: E731
+    c = _rollup(sys_flat, rates.ravel(),
+                tile(geom.is_union[geom.sys_idx]), W * S,
+                tile(table.mem_pj * 1e-12), tile(table.compute_pj * 1e-12),
+                tile(table.latency_s), tile(table.standby_w),
+                tile(table.wake_energy_j), tile(rel_j))
+    per_sys = {k: c[k].reshape(W, S)
+               for k in ("duty", "feasible", "standby_w", "wake_j",
+                         "wake_rate", "dyn_w", "compute_w", "reload_w",
+                         "p_mem_w")}
+    return WindowColumns(
+        geometry=geom, energy=table, rates=rates, reload_j=rel_j,
+        stream_duty=c["stream_duty"].reshape(W, R),
+        stream_dyn_w=c["stream_dyn_w"].reshape(W, R),
+        switch_rate=c["switch_rate"].reshape(W, R), **per_sys)

@@ -168,3 +168,43 @@ def test_repo_baseline_is_small(repo_findings):
     baseline = Baseline.load(Path(__file__).parent.parent / "tools" /
                              "analysis_baseline.json")
     assert len(baseline.entries) <= 5
+
+
+# ---------------------------------------------------------------------------
+# --write-baseline requires a real justification (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_validate_justification_rejects_placeholders():
+    from repro.analysis.runner import validate_justification
+    assert validate_justification("  intentional: shared cache  ") \
+        == "intentional: shared cache"
+    for bad in (None, "", "   ", "TODO: justify or fix",
+                "todo later", "To Do: fill in"):
+        with pytest.raises(ValueError):
+            validate_justification(bad)
+
+
+def test_write_baseline_refuses_new_entries_without_justify(tmp_path,
+                                                            capsys):
+    from repro.analysis.runner import main
+    # an EMPTY baseline makes the repo's accepted findings "new" again
+    baseline = tmp_path / "baseline.json"
+    args = ["--baseline", str(baseline), "--write-baseline"]
+    # no --justify: refused, nothing written
+    assert main(args) == 2
+    assert "justif" in capsys.readouterr().err
+    assert not baseline.exists()
+    # TODO placeholder: refused
+    assert main(args + ["--justify", "TODO: justify or fix"]) == 2
+    assert not baseline.exists()
+    # real justification: accepted and recorded on the new entries
+    assert main(args + ["--justify", "accepted for this test run"]) == 0
+    data = json.loads(baseline.read_text())
+    assert data["findings"]
+    for entry in data["findings"]:
+        assert entry["justification"] == "accepted for this test run"
+    # re-write with NO new findings: --justify not required, existing
+    # justifications survive
+    assert main(args) == 0
+    data2 = json.loads(baseline.read_text())
+    assert data2 == data

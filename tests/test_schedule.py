@@ -376,3 +376,88 @@ def test_collective_bytes_sees_quantized_collectives():
     out = rl.collective_bytes(QUANT_HLO)
     assert out["all-gather"] == 2048 * 32
     assert out["all-reduce"] == 512 * 512 // 2
+
+
+# ---------------------------------------------------------------------------
+# boundary cases feeding the trace simulator (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+
+def test_stream_rejects_nonfinite_ips():
+    with pytest.raises(ValueError, match=r"finite"):
+        Stream("detnet", float("inf"))
+    with pytest.raises(ValueError, match=r"ips"):
+        Stream("detnet", float("nan"))
+
+
+def test_system_point_rejects_duplicate_stream_names():
+    with pytest.raises(ValueError, match=r"detnet"):
+        SystemPoint((Stream("detnet", 10.0), Stream("detnet", 5.0)),
+                    "simba", 7, "p1")
+    # distinct names stay fine
+    SystemPoint((Stream("detnet", 10.0), Stream("edsnet", 0.1)),
+                "simba", 7, "p1")
+
+
+def test_duty_exactly_one_has_zero_idle_and_zero_wake_energy():
+    """The PR-5 bugfix's edge, exactly on the boundary: sum(duty) == 1.0
+    leaves NO idle window, so the standby AND wake terms must both be
+    exactly zero (wake fires per gating event; no gating at full duty) and
+    the point is still feasible. One ulp above is infeasible."""
+    sp = SystemPoint((Stream("detnet", 10.0),), "simba", 7, "sram")
+    geom = _EV.system_geometry([sp])
+    lat = schedule.price(geom).energy.latency_s[0]
+    # hunt the float rate whose product with the latency is EXACTLY 1.0
+    cands = [1.0 / lat]
+    for _ in range(8):
+        cands.append(np.nextafter(cands[-1], 0.0))
+    for _ in range(8):
+        cands.insert(0, np.nextafter(cands[0], np.inf))
+    exact = [r for r in cands if r * lat == 1.0]
+    assert exact, "no representable rate hits duty == 1.0 exactly"
+    r = exact[0]
+    cols = schedule.window_rollup(geom, [[r]])
+    assert cols.duty[0, 0] == 1.0
+    assert bool(cols.feasible[0, 0])
+    assert cols.idle_frac[0, 0] == 0.0
+    assert cols.wake_rate[0, 0] == 0.0
+    # p_mem is purely dynamic: no standby, no wake, no reload (solo stream)
+    assert cols.p_mem_w[0, 0] == cols.dyn_w[0, 0]
+    # one ulp more rate: duty crosses 1, infeasible, idle still clamps to 0
+    over = next(r2 for r2 in cands if r2 * lat > 1.0)
+    cols2 = schedule.window_rollup(geom, [[over]])
+    assert not bool(cols2.feasible[0, 0])
+    assert cols2.idle_frac[0, 0] == 0.0
+
+
+def test_near_zero_rate_stream_stays_finite_and_monotone():
+    """EDSNet at 0.001 IPS: duty and switch rates collapse toward zero but
+    every output stays finite and below the 0.1-IPS reference."""
+    mk = lambda e_ips: SystemPoint(
+        (Stream("detnet", 10.0), Stream("edsnet", e_ips)),
+        "simba", 7, "sram", mode="reload")
+    tab = _EV.system_table([mk(0.001), mk(0.1)])
+    tiny, ref = 0, 1
+    assert np.isfinite(tab.p_mem_w).all()
+    assert bool(tab.feasible[tiny])
+    assert tab.stream_duty[2 * tiny + 1] < 1e-4
+    # a 0.001-IPS interferer preempts detnet only 0.001 times a second
+    assert tab.switch_rate[2 * tiny] == pytest.approx(0.001)
+    assert tab.switch_rate[2 * tiny + 1] == pytest.approx(0.001)
+    assert tab.p_mem_w[tiny] < tab.p_mem_w[ref]
+    assert tab.reload_w[tiny] < tab.reload_w[ref]
+
+
+def test_reload_equals_union_when_all_weight_levels_nonvolatile():
+    """With every weight level on a non-volatile tech the weights survive
+    context switches, so mode='reload' charges ZERO reload energy — equal
+    to union's by definition — while an all-SRAM hierarchy pays."""
+    for tech in ("stt", "sot", "vgsot"):
+        pts = [SystemPoint(xp.XR_BUNDLE, "simba", 7,
+                           placement=Placement.uniform(tech), mode=m)
+               for m in schedule.MODES]
+        tab = _EV.system_table(pts)
+        assert np.array_equal(tab.reload_j, np.zeros(4))
+        assert np.array_equal(tab.reload_w, np.zeros(2))
+    sram = _EV.system_table(
+        [SystemPoint(xp.XR_BUNDLE, "simba", 7, "sram", mode="reload")])
+    assert sram.reload_w[0] > 0.0

@@ -80,6 +80,11 @@ def _sweep_space(name):
         # parity oracle (single-stream reduction to memory_power_w +
         # roll-up consistency) lives in tests/test_schedule.py
         pytest.skip("system sweep is covered by tests/test_schedule.py")
+    if name == "trace":
+        # same SystemPoint space; the trace parity oracle (constant-rate
+        # scenario == steady-state pricing byte-identically) lives in
+        # tests/test_trace.py
+        pytest.skip("trace sweep is covered by tests/test_trace.py")
     return xp.SWEEPS[name].space()
 
 

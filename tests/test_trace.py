@@ -1,0 +1,355 @@
+"""Trace-driven simulation tests (repro.trace, DESIGN.md §11).
+
+The two core properties from the ISSUE's acceptance criteria:
+
+  * parity oracle — a constant-rate scenario at the streams' own rates
+    reproduces the steady-state ``SystemPoint`` report BYTE-identically;
+  * merge invariance — re-partitioning a scenario into finer equal-rate
+    windows changes no output (hypolite property): the simulator
+    canonicalizes the partition before pricing.
+
+Plus: scenario library/validation, battery-life folding, deadline misses,
+the Chrome tracing export schema, Evaluator wiring (geometry cache reuse)
+and the SWEEPS["trace"] ranking.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse
+from repro.core import experiment as xp
+from repro.core import schedule
+from repro.core.placement import Placement
+from repro.core.schedule import Stream, SystemPoint
+from repro.trace import (SCENARIOS, Scenario, TraceSimulator, chrome_trace,
+                         get_scenario, simulate, write_chrome_trace)
+from repro.trace.chrometrace import validate_events
+from repro.trace.simulator import battery_hours
+
+ALL_TECHS = ("sram", "stt", "sot", "vgsot")
+
+_EV = xp.Evaluator()        # module-shared: structural caches amortize
+
+
+def _systems(modes=("reload", "union"), variants=("sram", "p0", "p1")):
+    return [SystemPoint(xp.XR_BUNDLE, "simba", 7, variant=v, mode=m)
+            for v in variants for m in modes]
+
+
+def _steady_scenario(duration_s=30.0):
+    return Scenario.constant({s.name: s.ips for s in xp.XR_BUNDLE},
+                             duration_s)
+
+
+# ---------------------------------------------------------------------------
+# Scenario construction + validation
+# ---------------------------------------------------------------------------
+
+def test_scenario_validation_errors():
+    with pytest.raises(ValueError, match=r"at least one"):
+        Scenario("x", (), 1.0)
+    with pytest.raises(ValueError, match=r"t=0"):
+        Scenario("x", ((1.0, {"a": 1.0}),), 2.0)
+    with pytest.raises(ValueError, match=r"strictly increasing"):
+        Scenario("x", ((0.0, {"a": 1.0}), (0.0, {"a": 2.0})), 2.0)
+    with pytest.raises(ValueError, match=r"duration_s"):
+        Scenario("x", ((0.0, {"a": 1.0}), (5.0, {"a": 2.0})), 5.0)
+    with pytest.raises(ValueError, match=r"rate"):
+        Scenario("x", ((0.0, {"a": -1.0}),), 1.0)
+    with pytest.raises(ValueError, match=r"rate"):
+        Scenario("x", ((0.0, {"a": float("nan")}),), 1.0)
+    with pytest.raises(ValueError, match=r"name"):
+        Scenario("x", ((0.0, {"": 1.0}),), 1.0)
+    with pytest.raises(ValueError, match=r"unknown scenario"):
+        get_scenario("nope")
+
+
+def test_scenario_hold_last_semantics():
+    sc = Scenario("x", ((0.0, {"a": 2.0}),
+                        (1.0, {"b": 3.0}),       # a holds 2.0
+                        (2.0, {"a": 0.0})), 3.0)
+    assert sc.streams == ("a", "b")
+    assert sc.rates_at(0.5) == {"a": 2.0, "b": 0.0}
+    assert sc.rates_at(1.5) == {"a": 2.0, "b": 3.0}
+    assert sc.rates_at(2.5) == {"a": 0.0, "b": 3.0}
+    with pytest.raises(ValueError, match=r"outside"):
+        sc.rates_at(3.0)
+
+
+def test_scenario_canonical_merges_equal_windows():
+    sc = Scenario("x", ((0.0, {"a": 1.0}),
+                        (1.0, {"a": 1.0}),       # no-op change
+                        (2.0, {"a": 5.0})), 4.0)
+    can = sc.canonical()
+    assert [t for t, _ in can.segments] == [0.0, 2.0]
+    sub = sc.subdivide(3)
+    assert len(sub.segments) == 9
+    assert sub.canonical() == can
+
+
+def test_scenario_library_builds_and_is_nontrivial():
+    for name, build in SCENARIOS.items():
+        sc = build()
+        assert sc.name == name
+        assert sc.duration_s == 60.0
+        assert set(sc.streams) == {"detnet", "edsnet"}
+        assert get_scenario(name, duration_s=90.0).duration_s == 90.0
+    assert len(get_scenario("gaming").canonical().segments) > 3
+
+
+# ---------------------------------------------------------------------------
+# parity oracle: constant scenario == steady-state SystemPoint, byte-identical
+# ---------------------------------------------------------------------------
+
+def test_constant_scenario_matches_steady_state_byte_identically():
+    pts = _systems() + [
+        SystemPoint(xp.XR_BUNDLE, "simba", 7,
+                    placement=Placement.enumerate("simba", ALL_TECHS)[137],
+                    mode=m) for m in schedule.MODES]
+    stab = _EV.system_table(pts)
+    tr = _EV.trace_table(pts, _steady_scenario())
+    assert tr.n_windows == 1
+    # byte-identity of every pricing output (no tolerance)
+    assert np.array_equal(tr.cols.p_mem_w[0], stab.p_mem_w)
+    assert np.array_equal(tr.cols.duty[0], stab.duty)
+    assert np.array_equal(tr.cols.feasible[0], stab.feasible)
+    assert np.array_equal(tr.cols.dyn_w[0], stab.dyn_w)
+    assert np.array_equal(tr.cols.reload_w[0], stab.reload_w)
+    assert np.array_equal(tr.cols.wake_rate[0], stab.wake_rate)
+    assert np.array_equal(tr.cols.stream_duty[0], stab.stream_duty)
+    assert np.array_equal(tr.cols.switch_rate[0], stab.switch_rate)
+    # folded averages ARE the steady-state power (one window)
+    assert np.array_equal(tr.avg_p_mem_w, stab.p_mem_w)
+    assert np.array_equal(tr.peak_p_mem_w, stab.p_mem_w)
+
+
+def test_trace_reuses_steady_state_geometry_cache():
+    ev = xp.Evaluator()
+    pts = _systems(modes=("reload",), variants=("p1",))
+    ev.system_table(pts)
+    before = ev.cache_info()["plan"]
+    ev.trace_table(pts, get_scenario("gaming"))
+    after = ev.cache_info()["plan"]
+    assert after[0] == before[0] + 1       # geometry HIT, no new plan
+    assert after[1] == before[1]
+
+
+# ---------------------------------------------------------------------------
+# merge invariance (hypolite property)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(sorted(SCENARIOS)), st.integers(2, 6))
+def test_subdivided_scenario_prices_identically(name, k):
+    sc = get_scenario(name)
+    pts = _systems(variants=("p0",))
+    a = _EV.trace_table(pts, sc)
+    b = _EV.trace_table(pts, sc.subdivide(k))
+    assert a.n_windows == b.n_windows
+    assert np.array_equal(a.window_t0, b.window_t0)
+    assert np.array_equal(a.window_dur, b.window_dur)
+    assert np.array_equal(a.cols.p_mem_w, b.cols.p_mem_w)
+    assert np.array_equal(a.cols.p_total_w, b.cols.p_total_w)
+    assert np.array_equal(a.energy_j, b.energy_j)
+    assert np.array_equal(a.battery_h, b.battery_h)
+    assert np.array_equal(a.p99_p_total_w, b.p99_p_total_w)
+
+
+# ---------------------------------------------------------------------------
+# window semantics: rate changes, off streams, deadline misses, battery
+# ---------------------------------------------------------------------------
+
+def test_off_stream_contributes_nothing_and_is_never_switched_into():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="sram",
+                     mode="reload")
+    sc = Scenario("off", ((0.0, {"detnet": 10.0, "edsnet": 0.0}),), 10.0)
+    tr = _EV.trace_table([sp], sc)
+    assert tr.n_windows == 1
+    # edsnet row: zero duty, zero dynamic power, zero switches
+    assert tr.cols.stream_duty[0, 1] == 0.0
+    assert tr.cols.stream_dyn_w[0, 1] == 0.0
+    assert np.array_equal(tr.cols.switch_rate[0], [0.0, 0.0])
+    # ... so the system prices as detnet alone
+    solo = _EV.system_table(
+        [sp.with_(streams=(Stream("detnet", 10.0),))])
+    assert tr.cols.stream_duty[0, 0] == solo.stream_duty[0]
+    assert tr.cols.dyn_w[0, 0] == solo.dyn_w[0]
+
+
+def test_unmentioned_stream_holds_steady_rate():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="p1")
+    sc = Scenario("only-det", ((0.0, {"detnet": 40.0}),), 10.0)
+    tr = _EV.trace_table([sp], sc)
+    assert tr.cols.rates[0, 0] == 40.0
+    assert tr.cols.rates[0, 1] == xp.IPS_MIN["edsnet"]   # held
+
+
+def test_scenario_unknown_stream_raises():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="p1")
+    sc = Scenario("bad", ((0.0, {"resnet": 1.0}),), 1.0)
+    with pytest.raises(ValueError, match=r"resnet"):
+        simulate(_EV, sp, sc)
+
+
+def test_deadline_misses_counted_and_timed():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="sram")
+    lat = _EV.system_table([sp]).energy.latency_s[0]
+    burst = 2.0 / lat                       # detnet alone needs duty 2
+    sc = Scenario("burst", ((0.0, {"detnet": 10.0, "edsnet": 0.1}),
+                            (4.0, {"detnet": burst}),
+                            (5.0, {"detnet": 10.0})), 10.0)
+    tr = _EV.trace_table([sp], sc)
+    assert int(tr.miss_windows[0]) == 1
+    assert tr.miss_time_s[0] == pytest.approx(1.0)
+    assert bool((~tr.cols.feasible).any())
+    assert tr.peak_p_total_w[0] > tr.avg_p_total_w[0]
+
+
+def test_battery_life_scales_with_budget_and_power():
+    assert battery_hours(1.0, mah=1000.0, volts=3.85) == pytest.approx(3.85)
+    assert battery_hours(0.0) == np.inf
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="p1")
+    sc = get_scenario("gaming")
+    a = _EV.trace_table([sp], sc, battery_mah=500.0)
+    b = _EV.trace_table([sp], sc, battery_mah=1000.0)
+    assert b.battery_h[0] == pytest.approx(2.0 * a.battery_h[0])
+    assert a.battery_h[0] == pytest.approx(
+        0.5 * 3.85 / a.avg_p_total_w[0])
+    with pytest.raises(ValueError, match=r"battery_mah"):
+        _EV.trace_table([sp], sc, battery_mah=0.0)
+
+
+def test_idle_scenario_favors_nvm_residency():
+    """The motivating claim: under idle (retention-dominated) load the
+    all-NVM placement beats all-SRAM on battery life."""
+    sc = get_scenario("idle")
+    pts = [SystemPoint(xp.XR_BUNDLE, "simba", 7, variant=v)
+           for v in ("sram", "p1")]
+    tr = _EV.trace_table(pts, sc)
+    assert tr.battery_h[1] > tr.battery_h[0]
+    assert tr.avg_p_mem_w[1] < tr.avg_p_mem_w[0]
+
+
+def test_p99_is_duration_weighted():
+    sp = SystemPoint(xp.XR_BUNDLE, "simba", 7, variant="p1")
+    # 99.5% of the horizon at low rates, 0.5% at app rates: p99 must pick
+    # the LOW-rate power (a window-count percentile would pick the peak)
+    sc = Scenario("spike", ((0.0, {"detnet": 10.0, "edsnet": 0.1}),
+                            (199.0, {"detnet": 40.0, "edsnet": 6.0})),
+                  200.0)
+    tr = _EV.trace_table([sp], sc)
+    assert tr.p99_p_total_w[0] == tr.cols.p_total_w[0, 0]
+    assert tr.peak_p_total_w[0] == tr.cols.p_total_w[1, 0]
+
+
+# ---------------------------------------------------------------------------
+# Evaluator / ResultSet / sweep wiring
+# ---------------------------------------------------------------------------
+
+def test_evaluate_trace_resultset_rows():
+    pts = _systems(variants=("p1",))
+    rs = _EV.evaluate_trace(pts, get_scenario("gaming"))
+    assert len(rs) == 2
+    rows = rs.to_rows()
+    for row in rows:
+        assert row["scenario"] == "gaming"
+        assert row["battery_h"] > 0.0
+        assert {"avg_p_total_w", "peak_p_total_w", "p99_p_total_w",
+                "miss_windows", "reload_mj", "wake_mj"} <= set(row)
+    assert {r["mode"] for r in rows} == {"reload", "union"}
+
+
+def test_trace_sweep_ranks_lattice_by_battery_life():
+    rows = dse.sweep_trace(scenario="idle", techs=("sram", "stt"))
+    assert len(rows) == 2 ** 4
+    assert [r["rank"] for r in rows] == list(range(1, 17))
+    hours = [r["battery_h"] for r in rows]
+    assert hours == sorted(hours, reverse=True)
+    assert "trace" in xp.SWEEPS
+    assert rows[0]["scenario"] == "idle"
+
+
+def test_trace_simulator_front():
+    sim = TraceSimulator(_EV, battery_mah=250.0)
+    tab = sim.run(_systems(variants=("p0",)), "passthrough")
+    assert tab.battery_mah == 250.0
+    assert tab.n_windows == 1       # passthrough is the constant anchor
+
+
+# ---------------------------------------------------------------------------
+# Chrome tracing export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema(tmp_path):
+    pts = _systems(variants=("sram", "p1"), modes=("reload",))
+    tr = _EV.trace_table(pts, get_scenario("gaming"))
+    path = tmp_path / "trace.json"
+    write_chrome_trace(tr, str(path))
+    doc = json.loads(path.read_text())
+    assert validate_events(doc) == []
+    events = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    # every event carries the required keys
+    for e in events:
+        assert {"ph", "ts", "pid", "tid"} <= set(e)
+    # one process per system, one named track per stream + gating tracks
+    pids = {e["pid"] for e in events}
+    assert pids == {1, 2}
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"detnet", "edsnet", "standby", "wake", "reload",
+            "deadline"} <= names
+    # stream windows cover the horizon in order, in microseconds
+    det = [e for e in events
+           if e["ph"] == "X" and e.get("cat") == "stream"
+           and e["pid"] == 1 and e["tid"] == 1]
+    assert det[0]["ts"] == 0
+    assert det[-1]["ts"] + det[-1]["dur"] == int(60.0 * 1e6)
+    # counters present for both power views
+    counters = [e for e in events if e["ph"] == "C"]
+    assert counters and all("p_total_w" in e["args"] for e in counters)
+
+
+def test_validate_events_flags_bad_documents():
+    assert validate_events({}) == ["traceEvents missing or empty"]
+    bad = {"traceEvents": [{"ph": "X", "ts": 0, "pid": 1}]}
+    assert any("tid" in e for e in validate_events(bad))
+    bad = {"traceEvents": [{"ph": "X", "ts": -5, "pid": 1, "tid": 1,
+                            "dur": 1}]}
+    assert any("non-negative" in e for e in validate_events(bad))
+    bad = {"traceEvents": [{"ph": "X", "ts": 0, "pid": 1, "tid": 1}]}
+    assert any("dur" in e for e in validate_events(bad))
+
+
+# ---------------------------------------------------------------------------
+# window_rollup hook (core.schedule)
+# ---------------------------------------------------------------------------
+
+def test_window_rollup_validates_rates():
+    geom = _EV.system_geometry(_systems(variants=("p1",),
+                                        modes=("reload",)))
+    with pytest.raises(ValueError, match=r"\(W, 2\)"):
+        schedule.window_rollup(geom, np.zeros((3, 5)))
+    with pytest.raises(ValueError, match=r"finite"):
+        schedule.window_rollup(geom, [[-1.0, 0.1]])
+    with pytest.raises(ValueError, match=r"finite"):
+        schedule.window_rollup(geom, [[np.inf, 0.1]])
+
+
+def test_window_rollup_batches_match_per_window_pricing():
+    """Each row of a batched multi-window roll-up equals pricing that
+    window alone (the flattening introduces no cross-window coupling)."""
+    pts = _systems(variants=("p0", "p1"))
+    geom = _EV.system_geometry(pts)
+    rng = np.random.default_rng(42)
+    rates = rng.uniform(0.0, 20.0, size=(5, len(geom.sys_idx)))
+    batched = schedule.window_rollup(geom, rates)
+    for w in range(5):
+        solo = schedule.window_rollup(geom, rates[w:w + 1])
+        assert np.array_equal(batched.p_mem_w[w], solo.p_mem_w[0])
+        assert np.array_equal(batched.duty[w], solo.duty[0])
+        assert np.array_equal(batched.switch_rate[w], solo.switch_rate[0])
+        assert np.array_equal(batched.reload_w[w], solo.reload_w[0])
