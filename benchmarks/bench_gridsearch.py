@@ -172,7 +172,7 @@ def pr1_score(ev: Evaluator):
         base = ev.base_arch(p)
         groups.setdefault((p.workload_key(), base), (base, []))[1].append(p)
     out_reports = {}
-    for (wkey, _), (base, members) in groups.items():
+    for base, members in groups.values():
         accesses = ev.accesses(members[0], base)
         for p, rep in zip(members, _pr1_price_batch(accesses, base, members)):
             out_reports[p] = rep

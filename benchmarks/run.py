@@ -12,10 +12,18 @@ import json
 import time
 
 
+# Wall-clock ceiling for ONE full analysis pass (all checkers, incl. the
+# SH/MU interprocedural fixpoints). The pass currently takes well under
+# 5 s; the generous budget only exists so a quadratic blow-up in the
+# call-graph fixpoint fails loudly here instead of silently eating CI.
+ANALYSIS_BUDGET_S = 30.0
+
+
 def analysis_smoke():
     """Static-analysis pass (repro.analysis) timed like a figure: the
-    CK/UN/FZ/PO sweep over src/repro must stay cheap enough to sit in the
-    edit loop, and any NEW (non-baselined) finding fails the smoke."""
+    CK/UN/FZ/PO/SH/MU sweep over src/repro must stay cheap enough to sit
+    in the edit loop, and any NEW (non-baselined) finding fails the
+    smoke."""
     from pathlib import Path
 
     from repro.analysis.findings import Baseline
@@ -33,6 +41,24 @@ def analysis_smoke():
             for f in findings]
     return rows, (f"{len(suppressed)} baselined, {len(stale)} stale, "
                   f"0 new")
+
+
+def analysis_runtime():
+    """Interprocedural-fixpoint cost guard: one full analysis pass must
+    finish inside ``ANALYSIS_BUDGET_S`` wall-clock seconds."""
+    from repro.analysis.runner import CHECKERS, run_analysis
+
+    t0 = time.monotonic()
+    findings = run_analysis()
+    dt = time.monotonic() - t0
+    if dt > ANALYSIS_BUDGET_S:
+        raise SystemExit(f"analysis_runtime: full analysis pass took "
+                         f"{dt:.1f}s > {ANALYSIS_BUDGET_S:.0f}s budget "
+                         f"(interprocedural fixpoint cost has regressed)")
+    rows = [{"checkers": ",".join(CHECKERS), "seconds": round(dt, 3),
+             "findings": len(findings)}]
+    return rows, (f"{len(CHECKERS)} checkers in {dt:.2f}s "
+                  f"(budget {ANALYSIS_BUDGET_S:.0f}s)")
 
 
 def calibrate_smoke():
@@ -107,7 +133,7 @@ def main() -> None:
     all_rows = {}
     print("name,us_per_call,derived")
     fns = list(paper.ALL) + [roofline_table.roofline_table, analysis_smoke,
-                             calibrate_smoke, trace_smoke]
+                             analysis_runtime, calibrate_smoke, trace_smoke]
     for fn in fns:
         t0 = time.monotonic()
         rows, derived = fn()

@@ -1,6 +1,6 @@
 """Static analysis for the pricing stack (stdlib ``ast`` only).
 
-Four checkers guard the bug classes that have bitten this repo before:
+Six checkers guard the bug classes that have bitten this repo before:
 
 * **CK** (`ck.py`) — cache-key soundness: every ``DesignPoint`` /
   ``SystemPoint`` attribute a memoized computation reads must be folded
@@ -14,10 +14,23 @@ Four checkers guard the bug classes that have bitten this repo before:
   classes may not mutate ``self`` outside their declared cache dicts.
 * **PO** (`po.py`) — parity-oracle coverage: every public columnar
   symbol in ``core/columns.py`` must be referenced by at least one test.
+* **SH** (`sh.py`) — symbolic shape/broadcast dataflow over the
+  (P, L, G, N, W, S, R, K, Q) axis vocabulary: incompatible broadcasts,
+  unintended rank promotion, axis-mismatched reductions / ``bincount``
+  lengths, reshapes that don't factor, ctor/return shape contracts.
+* **MU** (`mu.py`) — cache-aliasing / mutation soundness: per-function
+  mutation summaries over the call graph; arrays reachable from
+  Evaluator/LatticePricer caches must not escape to mutating callers
+  (the static precondition for the shared-LRU serving engine).
+
+SH and MU are interprocedural: they run on per-function summaries
+computed bottom-up over the resolved call graph (``Project.fixpoint``).
 
 Entry points: ``python tools/analyze.py`` or ``python -m repro.analysis``.
 Accepted findings live in ``tools/analysis_baseline.json`` (see
-``runner.py``); anything *new* fails ``--check``.
+``runner.py``); anything *new* fails ``--check``. Useful flags:
+``--only CK,SH`` to run a subset, ``--stats`` for a per-checker/severity
+summary.
 """
 from repro.analysis.findings import Finding, Severity
 from repro.analysis.runner import main, run_analysis

@@ -4,13 +4,20 @@ Loads every ``*.py`` under a package root (and optional extra roots like
 ``tests/``) into :class:`ModuleInfo` records and builds a flat qualname
 index of functions and classes so checkers can resolve ``self.foo()``,
 ``module.func()`` and imported names to their defining AST nodes.
+
+On top of the symbol index sits the interprocedural engine shared by the
+CK/SH/MU checkers: :meth:`Project.call_sites` resolves every call inside
+a function, :meth:`Project.call_graph` assembles the project-wide callee
+map, and :meth:`Project.fixpoint` drives bottom-up per-function summary
+computation (callees-first, iterated to a fixed point so call cycles
+converge instead of recursing).
 """
 from __future__ import annotations
 
 import ast
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 
 @dataclass
@@ -67,6 +74,8 @@ class Project:
         self.classes: Dict[str, ClassInfo] = {}
         # repo root used for repo-relative finding paths
         self.root: Path = Path(".")
+        # qualname -> resolved call sites, built lazily by call_sites()
+        self._call_sites: Dict[str, List[Tuple[ast.Call, FuncInfo]]] = {}
 
     # ------------------------------------------------------------- loading
 
@@ -97,6 +106,8 @@ class Project:
         self._index_imports(mod)
         self.modules[modname] = mod
         self._index_symbols(mod)
+        # new symbols can change how previously-cached calls resolve
+        self._call_sites.clear()
         return mod
 
     def _index_imports(self, mod: ModuleInfo) -> None:
@@ -195,6 +206,88 @@ class Project:
         hits = [c for q, c in self.classes.items()
                 if q.rsplit(".", 1)[-1] == name]
         return hits[0] if len(hits) == 1 else None
+
+    # -------------------------------------------------------- interprocedural
+
+    def call_sites(self, fi: FuncInfo) -> List[Tuple[ast.Call, FuncInfo]]:
+        """Every call inside `fi` that resolves statically, in source order.
+
+        Nested defs/lambdas are included (ast.walk); checkers that need
+        stricter scoping filter on the call node themselves.
+        """
+        cached = self._call_sites.get(fi.qualname)
+        if cached is None:
+            mod = self.modules[fi.module]
+            cached = []
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call):
+                    target = self.resolve_call(mod, fi.cls, node)
+                    if target is not None:
+                        cached.append((node, target))
+            self._call_sites[fi.qualname] = cached
+        return cached
+
+    def call_graph(self) -> Dict[str, Tuple[str, ...]]:
+        """qualname -> statically-resolved callee qualnames (deduplicated)."""
+        out: Dict[str, Tuple[str, ...]] = {}
+        for qual, fi in self.functions.items():
+            out[qual] = tuple(dict.fromkeys(
+                t.qualname for _, t in self.call_sites(fi)))
+        return out
+
+    def postorder(self) -> List[str]:
+        """Callees-first ordering of all functions (cycles broken at the
+        first revisit) — the seed order that lets `fixpoint` converge in
+        one round on acyclic call chains."""
+        graph = self.call_graph()
+        seen: set = set()
+        order: List[str] = []
+        # iterative DFS: (qualname, child cursor) frames
+        for root in sorted(graph):
+            if root in seen:
+                continue
+            seen.add(root)
+            stack: List[Tuple[str, int]] = [(root, 0)]
+            while stack:
+                qual, i = stack[-1]
+                kids = graph.get(qual, ())
+                if i < len(kids):
+                    stack[-1] = (qual, i + 1)
+                    kid = kids[i]
+                    if kid not in seen:
+                        seen.add(kid)
+                        stack.append((kid, 0))
+                else:
+                    order.append(qual)
+                    stack.pop()
+        return order
+
+    def fixpoint(self, transfer: Callable[[FuncInfo, Dict[str, Any]], Any],
+                 bottom: Any = None, max_rounds: int = 8) -> Dict[str, Any]:
+        """Bottom-up per-function summaries over the call graph.
+
+        ``transfer(fi, summaries)`` computes one function's summary from
+        the current summary map; callee entries may still be ``bottom``
+        inside call cycles, so transfer functions must treat missing
+        summaries optimistically. Iterates callees-first until one full
+        round changes nothing (``max_rounds`` bounds pathological cycles).
+        Shared by the CK/SH/MU checkers.
+        """
+        order = self.postorder()
+        summaries: Dict[str, Any] = {q: bottom for q in order}
+        for _ in range(max_rounds):
+            changed = False
+            for qual in order:
+                fi = self.functions.get(qual)
+                if fi is None:
+                    continue
+                new = transfer(fi, summaries)
+                if new != summaries[qual]:
+                    summaries[qual] = new
+                    changed = True
+            if not changed:
+                break
+        return summaries
 
     # ------------------------------------------------------------ iteration
 

@@ -1,12 +1,14 @@
 """Orchestration + CLI for the static-analysis pass.
 
 ``run_analysis`` loads the source tree into one :class:`Project` and
-runs the four checkers; ``main`` wraps it with baseline handling:
+runs the registered checkers; ``main`` wraps it with baseline handling:
 
 * default       — print every finding with its baseline status
 * ``--check``   — exit 2 if any finding is not in the baseline
 * ``--write-baseline`` — accept the current findings into the baseline;
   NEW entries require ``--justify`` with a real (non-TODO) justification
+* ``--only CK,SH`` — restrict the run to a subset of checkers
+* ``--stats``   — print a findings-per-checker/severity summary
 * ``--json``    — machine-readable output
 """
 from __future__ import annotations
@@ -15,13 +17,62 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
-from repro.analysis import ck, fz, po, un
+from repro.analysis import ck, fz, mu, po, sh, un
 from repro.analysis.findings import Baseline, Finding
 from repro.analysis.project import Project
 
 _SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
+
+# name -> runner; the registry order is the run order (interprocedural
+# checkers share the Project's lazily-built call-site cache, so running
+# them on one Project instance amortizes the fixpoint substrate)
+CHECKERS = {
+    "CK": lambda proj, tests_dir: ck.check(proj),
+    "UN": lambda proj, tests_dir: un.check(proj),
+    "FZ": lambda proj, tests_dir: fz.check(proj),
+    "PO": lambda proj, tests_dir: po.check(proj, tests_dir),
+    "SH": lambda proj, tests_dir: sh.check(proj),
+    "MU": lambda proj, tests_dir: mu.check(proj),
+}
+
+
+def parse_only(spec: Optional[str]) -> List[str]:
+    """Validate a ``--only CK,SH`` spec against the registry."""
+    if spec is None:
+        return list(CHECKERS)
+    names = [tok.strip().upper() for tok in spec.split(",") if tok.strip()]
+    unknown = [n for n in names if n not in CHECKERS]
+    if not names or unknown:
+        raise ValueError(
+            f"unknown checker(s) {unknown or spec!r}; "
+            f"available: {','.join(CHECKERS)}")
+    return names
+
+
+def stats_table(findings: Sequence[Finding]) -> str:
+    """Findings-per-checker/severity summary (one line per checker)."""
+    sevs = list(_SEV_ORDER)
+    counts: Dict[str, Dict[str, int]] = {}
+    for f in findings:
+        counts.setdefault(f.checker, dict.fromkeys(sevs, 0))
+        counts[f.checker][f.severity.value] += 1
+    lines = [f"{'checker':8s} " + " ".join(f"{s:>8s}" for s in sevs)
+             + f" {'total':>8s}"]
+    for name in sorted(counts):
+        row = counts[name]
+        lines.append(f"{name:8s} "
+                     + " ".join(f"{row[s]:8d}" for s in sevs)
+                     + f" {sum(row.values()):8d}")
+    total = dict.fromkeys(sevs, 0)
+    for row in counts.values():
+        for s in sevs:
+            total[s] += row[s]
+    lines.append(f"{'all':8s} "
+                 + " ".join(f"{total[s]:8d}" for s in sevs)
+                 + f" {sum(total.values()):8d}")
+    return "\n".join(lines)
 
 
 def validate_justification(text: Optional[str]) -> str:
@@ -47,18 +98,27 @@ def _default_roots():
 
 def run_analysis(package_root: Optional[Path] = None,
                  tests_dir: Optional[Path] = None,
-                 repo_root: Optional[Path] = None) -> List[Finding]:
-    """Run all four checkers over the repro package; sorted findings."""
+                 repo_root: Optional[Path] = None,
+                 only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the registered checkers over the repro package; sorted findings.
+
+    ``only`` restricts to a subset of :data:`CHECKERS` names (all by
+    default); unknown names raise ``ValueError``.
+    """
     pkg_default, repo_default, tests_default = _default_roots()
     package_root = package_root or pkg_default
     repo_root = repo_root or repo_default
     tests_dir = tests_dir or tests_default
+    names = list(CHECKERS) if only is None else list(only)
+    unknown = [n for n in names if n not in CHECKERS]
+    if unknown:
+        raise ValueError(f"unknown checker(s) {unknown}; "
+                         f"available: {','.join(CHECKERS)}")
     proj = Project.load(package_root, "repro", repo_root=repo_root)
     findings: List[Finding] = []
-    findings += ck.check(proj)
-    findings += un.check(proj)
-    findings += fz.check(proj)
-    findings += po.check(proj, tests_dir)
+    for name in CHECKERS:
+        if name in names:
+            findings += CHECKERS[name](proj, tests_dir)
     findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity.value, 9),
                                  f.checker, f.rule, f.path, f.symbol,
                                  f.fingerprint))
@@ -71,7 +131,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         prog="repro.analysis",
         description="Static analysis for the pricing stack "
                     "(CK cache keys, UN units, FZ frozen axes, "
-                    "PO parity coverage).")
+                    "PO parity coverage, SH symbolic shapes, "
+                    "MU cache-aliasing/mutation).")
     ap.add_argument("--root", type=Path, default=pkg_default,
                     help="package root to analyze (default: src/repro)")
     ap.add_argument("--tests", type=Path, default=tests_default,
@@ -89,10 +150,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "must be real prose, not empty/TODO")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit findings as JSON")
+    ap.add_argument("--only", metavar="NAMES",
+                    help="comma-separated checker subset to run "
+                         f"(available: {','.join(CHECKERS)})")
+    ap.add_argument("--stats", action="store_true",
+                    help="print a findings-per-checker/severity summary")
     args = ap.parse_args(argv)
 
+    try:
+        only = parse_only(args.only)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
     findings = run_analysis(package_root=args.root, tests_dir=args.tests,
-                            repo_root=repo_default)
+                            repo_root=repo_default, only=only)
     baseline = Baseline.load(args.baseline)
     new, suppressed, stale = baseline.split(findings)
 
@@ -140,6 +212,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"remove it")
         print(f"{len(new)} new finding(s), {len(suppressed)} baselined, "
               f"{len(stale)} stale")
+
+    if args.stats:
+        print(stats_table(findings))
 
     if args.check and new:
         return 2

@@ -19,6 +19,7 @@ fixed or baselined with a justification.
 from __future__ import annotations
 
 import ast
+import contextlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -211,10 +212,8 @@ class _FunctionChecker(ast.NodeVisitor):
                 if _known(known):
                     return known
                 return _UNKNOWN
-            if isinstance(op, ast.Mult):
-                u = left.unit * right.unit
-            else:
-                u = left.unit / right.unit
+            u = (left.unit * right.unit if isinstance(op, ast.Mult)
+                 else left.unit / right.unit)
             lit = left.is_lit and right.is_lit
             return _UVal(u, is_lit=lit)
         if isinstance(op, (ast.Add, ast.Sub)):
@@ -228,14 +227,12 @@ class _FunctionChecker(ast.NodeVisitor):
         if isinstance(op, ast.Pow):
             if _known(left) and right.is_lit and right.unit is not None \
                     and not right.is_zero:
-                try:
+                with contextlib.suppress(OverflowError, ZeroDivisionError):
                     exp = 1.0 / right.unit.scale   # recover literal value
                     if exp == int(exp):
                         k = int(exp)
                         dims = tuple(d * k for d in left.unit.dims)
                         return _UVal(Unit(dims, left.unit.scale ** k))
-                except (OverflowError, ZeroDivisionError):
-                    pass
             return _UNKNOWN
         if isinstance(op, ast.Mod):
             return left

@@ -147,10 +147,9 @@ def fit_constants(samples: Sequence[CalSample]):
     xs = np.array([s.width_pairs for s in samples])
     ys = np.array([s.bytes_per_mac for s in samples])
     k, c = np.polyfit(xs, ys, 1)
-    if k + c > 0 and k > 0:
-        dwf = float(np.clip(k / (k + c), 0.05, 0.95))
-    else:                                  # degenerate fit: keep the default
-        dwf = 0.5
+    # degenerate fit (non-positive slope/level) keeps the 0.5 default
+    dwf = (float(np.clip(k / (k + c), 0.05, 0.95))
+           if k + c > 0 and k > 0 else 0.5)
     pred = k * xs + c
     # scale-free residual: worst corner deviation over the mean level (a
     # per-point denominator would blow up on the GEMM's tiny bytes/MAC)

@@ -34,7 +34,7 @@ to zero without branches.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,6 +47,23 @@ from repro.core.archspec import ArchSpec
 from repro.core.dataflow import LayerAccess, LevelTraffic
 from repro.core.energy import EnergyReport, LevelEnergy
 from repro.core.placement import Placement
+
+
+def freeze_arrays(obj) -> None:
+    """Mark every ndarray field of a dataclass instance read-only.
+
+    Column tables are memoized by the Evaluator / LatticePricer and the
+    cached instance is returned to every caller by reference (defensive
+    copies would defeat the point of the structural caches). Freezing the
+    arrays at construction makes accidental in-place mutation of shared
+    state a loud ``ValueError`` instead of silent cross-caller corruption
+    — the runtime half of the MU checker's static guarantee. Callers that
+    legitimately need a scratch column must ``.copy()`` it.
+    """
+    for f in fields(obj):
+        v = getattr(obj, f.name)
+        if isinstance(v, np.ndarray):
+            v.setflags(write=False)
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +95,9 @@ class TrafficTable:
     compute_cycles: np.ndarray  # (N,)
     weight_bits: np.ndarray     # (N,) per-layer operand widths the mapping
     act_bits: np.ndarray        # (N,) was priced at (compute plane)
+
+    def __post_init__(self) -> None:
+        freeze_arrays(self)
 
     # --- construction -------------------------------------------------------
     @classmethod
@@ -324,6 +344,9 @@ class PricingPlan:
     tech_list: Tuple[str, ...]
     tech_idx: np.ndarray                 # (P, L) -> tech_list
 
+    def __post_init__(self) -> None:
+        freeze_arrays(self)
+
     @property
     def n_points(self) -> int:
         return len(self.points)
@@ -483,6 +506,9 @@ class EnergyTable:
     compute_cycles: np.ndarray   # (P,)
     bottleneck: np.ndarray       # (P,) object
 
+    def __post_init__(self) -> None:
+        freeze_arrays(self)
+
     def __len__(self) -> int:
         return self.plan.n_points
 
@@ -600,7 +626,11 @@ def price(plan: PricingPlan) -> EnergyTable:
     re-read from ``core.devices`` on every call (mutation-safe)."""
     P = plan.n_points
     if P == 0:
-        z2, z1 = np.zeros((0, 0)), np.zeros(0)
+        # keep the level axis: (0, 0) columns break every (P, L)-shaped
+        # aggregate ((standby_w_pl * weight_cls).sum, mem_pj_by_cls, ...)
+        # as soon as the plan's groups have real levels
+        L = plan.mask.shape[1]
+        z2, z1 = np.zeros((0, L)), np.zeros(0)
         return EnergyTable(plan, z2, z2, z2, z2, z2, z2.astype(bool),
                            z1, z1, z1, z1, np.empty(0, object))
     lm = _device_col(plan, "leak_mult")
@@ -677,9 +707,12 @@ def _pweight(e_weight_j, latency_s, weight_standby_w, ips):
 class PowerTable:
     """Memory power of every point over a shared IPS grid (paper Fig 5)."""
     energy: EnergyTable
-    ips: np.ndarray           # (G,)
-    p_mem_w: np.ndarray       # (P, G)
-    p_weight_w: np.ndarray    # (P, G)
+    ips: np.ndarray           # (Q,) shared IPS grid
+    p_mem_w: np.ndarray       # (P, Q)
+    p_weight_w: np.ndarray    # (P, Q)
+
+    def __post_init__(self) -> None:
+        freeze_arrays(self)
 
     def curve(self, i: int) -> np.ndarray:
         return self.p_mem_w[i]
@@ -734,6 +767,9 @@ class AreaTable:
     plan: PricingPlan
     levels_mm2: np.ndarray    # (P, L)
     compute_mm2: np.ndarray   # (P,)
+
+    def __post_init__(self) -> None:
+        freeze_arrays(self)
 
     def __len__(self) -> int:
         return self.plan.n_points

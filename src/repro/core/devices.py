@@ -17,6 +17,7 @@ All constants live HERE and nowhere else. Sources and calibration:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import math
@@ -212,14 +213,11 @@ def load_calibrated(path: str = _CALIB_PATH) -> Dict[str, float]:
     """Fitted compute-plane constants from the checked-in calibration JSON,
     falling back to the structural defaults (missing file, partial fit)."""
     out = dict(_CALIBRATED_DEFAULTS)
-    try:
-        with open(path) as f:
-            data = json.load(f)
+    with contextlib.suppress(OSError, ValueError), open(path) as f:
+        data = json.load(f)
         for k, v in data.get("constants", {}).items():
             if k in out:
                 out[k] = float(v)
-    except (OSError, ValueError):
-        pass
     return out
 
 

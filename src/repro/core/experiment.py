@@ -136,7 +136,8 @@ class Evaluator:
         # LRU-bounded: plans are keyed by the full point tuple, so one-off
         # spaces (hillclimb neighborhoods) would otherwise accumulate
         # forever; repeated spaces (gridsearch cells) stay resident.
-        self._plans: "OrderedDict[Tuple, columns.PricingPlan]" = OrderedDict()
+        # also holds schedule.SystemGeometry values ((pts, "system") keys)
+        self._plans: "OrderedDict[Tuple, Union[columns.PricingPlan, schedule.SystemGeometry]]" = OrderedDict()  # noqa: E501
         self._plans_max = 64
         self._reports: Dict[DesignPoint, EnergyReport] = {}
         self._areas: Dict[DesignPoint, area_mod.AreaReport] = {}

@@ -253,6 +253,9 @@ class SystemGeometry:
     weight_bits: np.ndarray             # (R,) stream weight footprint, bits
     is_union: np.ndarray                # (S,) bool
 
+    def __post_init__(self) -> None:
+        columns.freeze_arrays(self)
+
     @property
     def n_systems(self) -> int:
         return len(self.spoints)
@@ -354,6 +357,9 @@ class SystemTable:
     dyn_w: np.ndarray
     reload_w: np.ndarray
     p_mem_w: np.ndarray                  # the system memory power
+
+    def __post_init__(self) -> None:
+        columns.freeze_arrays(self)
 
     def __len__(self) -> int:
         return self.geometry.n_systems
@@ -509,6 +515,9 @@ class WindowColumns:
     compute_w: np.ndarray       # (W, S) dynamic compute power (battery view)
     reload_w: np.ndarray        # (W, S)
     p_mem_w: np.ndarray         # (W, S)
+
+    def __post_init__(self) -> None:
+        columns.freeze_arrays(self)
 
     @property
     def n_windows(self) -> int:

@@ -45,11 +45,10 @@ def main():
     a = p.parse_args()
 
     cfg = get_smoke(a.arch) if a.smoke else get_config(a.arch)
-    if a.mesh == "auto":
-        mesh = mesh_mod.make_mesh_from_devices(
-            model_parallel=min(4, len(jax.devices())))
-    else:
-        mesh = mesh_mod.make_production_mesh(multi_pod=a.mesh == "multipod")
+    mesh = (mesh_mod.make_mesh_from_devices(
+                model_parallel=min(4, len(jax.devices())))
+            if a.mesh == "auto" else
+            mesh_mod.make_production_mesh(multi_pod=a.mesh == "multipod"))
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"params={cfg.param_count():,}")
 

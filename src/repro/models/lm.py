@@ -208,7 +208,7 @@ def encode(cfg: ModelConfig, params: Dict, frames: jax.Array) -> jax.Array:
         x, _ = lax.scan(fn, x, enc["layers"])
     else:
         for r in range(cfg.encoder_layers):
-            x, _ = fn(x, jax.tree.map(lambda t: t[r], enc["layers"]))
+            x, _ = fn(x, jax.tree.map(lambda t, r=r: t[r], enc["layers"]))
     return L.rmsnorm(x, enc["final_norm"], cfg.norm_eps)
 
 
@@ -273,7 +273,7 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
         (x, aux), _ = lax.scan(fn, carry, xs)
     else:                                # unrolled (dry-run cost probes)
         for r in range(num_repeats(cfg)):
-            carry, _ = fn(carry, jax.tree.map(lambda t: t[r], xs))
+            carry, _ = fn(carry, jax.tree.map(lambda t, r=r: t[r], xs))
         x, aux = carry
     return _unembed(cfg, params, x), aux / max(1, cfg.num_layers)
 
@@ -392,7 +392,7 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
     else:                                # unrolled (dry-run cost probes)
         outs = []
         for r in range(num_repeats(cfg)):
-            x, nc = body(x, jax.tree.map(lambda t: t[r],
+            x, nc = body(x, jax.tree.map(lambda t, r=r: t[r],
                                          (params["blocks"], cache)))
             outs.append(nc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)

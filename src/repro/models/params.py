@@ -49,10 +49,8 @@ def materialize(defs, key: jax.Array):
                                ).astype(dt) * jnp.ones(d.shape, dt))
         else:
             fan_in = d.shape[0] if len(d.shape) > 1 else max(1, d.shape[-1])
-            if d.init == "scaled":
-                std = d.scale / np.sqrt(fan_in)
-            else:
-                std = 0.02 * d.scale
+            std = (d.scale / np.sqrt(fan_in) if d.init == "scaled"
+                   else 0.02 * d.scale)
             out.append((jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt))
     return jax.tree.unflatten(treedef, out)
 

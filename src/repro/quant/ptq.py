@@ -107,10 +107,8 @@ def calibrate_acts(forward_fn, batches: Iterable, pct: Optional[float] = 99.9,
     for batch in batches:
         acts = forward_fn(batch)
         for name, a in acts.items():
-            if pct is None:
-                m = float(jnp.max(jnp.abs(a)))
-            else:
-                m = float(jnp.percentile(jnp.abs(a), pct))
+            m = (float(jnp.max(jnp.abs(a))) if pct is None
+                 else float(jnp.percentile(jnp.abs(a), pct)))
             maxes[name] = max(maxes.get(name, 0.0), m)
     return {k: max(v, 1e-8) / qmax(bits) for k, v in maxes.items()}
 

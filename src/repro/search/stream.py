@@ -214,6 +214,9 @@ class LatticePricer:
         g = self._g
         self._gstack = np.stack([g["macro"], g["cap"], g["bus"], g["count"],
                                  g["read"], g["write"]], axis=1)
+        # chunk assembly hands out views of this block inside PricingPlans;
+        # read-only here makes every such view read-only too (MU guarantee)
+        self._gstack.setflags(write=False)
         self._g_arch = np.array([t.arch.name for t in groups], object)
         lsets, lpos = [], {}
         self._lsid_of_g = np.empty(len(groups), np.int64)

@@ -106,7 +106,7 @@ class Scenario:
         if not 0.0 <= t < self.duration_s:
             raise ValueError(f"Scenario({self.name!r}): t={t!r} outside "
                              f"[0, {self.duration_s})")
-        for t0, t1, rates in reversed(self.windows()):
+        for t0, _t1, rates in reversed(self.windows()):
             if t >= t0:
                 return rates
         raise AssertionError("unreachable")

@@ -24,7 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import schedule
+from repro.core import columns, schedule
 from repro.trace.scenario import Scenario
 
 # A typical XR glasses cell is a few hundred mAh at a nominal Li-ion
@@ -113,6 +113,9 @@ class TraceReport:
     standby_energy_j: float
     battery_h: float
 
+    def __post_init__(self) -> None:
+        columns.freeze_arrays(self)
+
     def to_row(self) -> Dict[str, Any]:
         """Tabular view (hooked by ``ResultSet._default_row``)."""
         p = self.point
@@ -152,6 +155,9 @@ class TraceTable:
     wake_energy_j: np.ndarray
     standby_energy_j: np.ndarray
     battery_h: np.ndarray
+
+    def __post_init__(self) -> None:
+        columns.freeze_arrays(self)
 
     def __len__(self) -> int:
         return self.cols.geometry.n_systems

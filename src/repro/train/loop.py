@@ -6,6 +6,7 @@ hook, and a per-step heartbeat for straggler monitoring (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import time
 from dataclasses import dataclass, field
@@ -77,8 +78,9 @@ def make_lm_step(cfg, lr_fn, max_grad_norm: float = 1.0):
 def run_xr_training(cfg, params, state, batches: Iterator, *,
                     loss_fn, steps: int, lr: float = 1e-3,
                     ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
-                    hooks: TrainHooks = TrainHooks(),
+                    hooks: Optional[TrainHooks] = None,
                     resume: bool = True) -> TrainResult:
+    hooks = hooks if hooks is not None else TrainHooks()
     lr_fn = optim.cosine_schedule(lr, warmup=min(50, steps // 10 + 1),
                                   total=steps)
     step_fn = make_xr_step(cfg, loss_fn, lr_fn)
@@ -92,10 +94,8 @@ def run_xr_training(cfg, params, state, batches: Iterator, *,
         batches = _skip_to(batches, extra.get("loader_idx", 0))
 
     preempted = []
-    try:
+    with contextlib.suppress(ValueError):      # non-main thread
         signal.signal(signal.SIGTERM, lambda *_: preempted.append(True))
-    except ValueError:
-        pass                                   # non-main thread
 
     losses, times, writer = [], [], None
     for step in range(start, steps):

@@ -1,0 +1,320 @@
+"""Tests for the interprocedural SH (symbolic shapes) and MU
+(cache-aliasing/mutation) checkers, plus the runtime half of MU's
+guarantee (``columns.freeze_arrays``) and the analyze CLI's
+``--only`` / ``--stats`` flags.
+
+Structure mirrors ``test_analysis.py``: one deliberately-broken fixture
+per rule via ``Project.add_module``, a hypolite property that SH
+verdicts are invariant under reformatting, and revert-the-fix
+regressions proving each checker catches the pre-existing true positive
+this PR fixed in ``src/`` (the empty-plan ``(0, 0)`` energy table and
+the unfrozen structural caches).
+"""
+import dataclasses
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import mu, sh
+from repro.analysis.findings import Severity
+from repro.analysis.project import Project
+from repro.analysis.runner import CHECKERS, main, parse_only, run_analysis
+from repro.configs.base import ConvLayerSpec
+from repro.core import columns, energy
+from repro.core.archspec import get_arch
+from repro.core.space import DesignPoint
+
+
+def _project(source: str, modname: str = "fix.mod") -> Project:
+    proj = Project()
+    proj.add_module(Path(*modname.split(".")).with_suffix(".py"), modname,
+                    source=textwrap.dedent(source))
+    return proj
+
+
+def _repo_project():
+    src_root = Path(__file__).parent.parent / "src" / "repro"
+    proj = Project.load(src_root, "repro",
+                        repo_root=src_root.parent.parent)
+    return proj, src_root
+
+
+# --- SH: one bad fixture per rule ------------------------------------------
+
+SH_BAD = """
+    import numpy as np
+    from dataclasses import dataclass
+
+    @dataclass(frozen=True)
+    class Table:
+        read_pj: np.ndarray    # (P, L)
+        per_point: np.ndarray  # (P,)
+        per_level: np.ndarray  # (L,)
+        wr: np.ndarray         # (W, R)
+
+    def bad_broadcast(t: Table):
+        return t.per_point * t.per_level
+
+    def bad_promotion(t: Table):
+        return t.per_point[:, None] + t.per_level
+
+    def bad_reduce(t: Table):
+        return t.per_point.sum(axis=1)
+
+    def bad_bincount(t: Table):
+        return np.bincount(np.arange(R), weights=t.per_level)
+
+    def bad_reshape(t: Table):
+        return t.wr.ravel().reshape(W, S)
+
+    def bad_ctor(t: Table):
+        return Table(np.zeros((0, 0)), np.zeros(0), t.per_level, t.wr)
+
+    def good_ctor(t: Table):
+        P = t.per_point.shape[0]
+        if P == 0:
+            return Table(np.zeros((0, t.read_pj.shape[1])), np.zeros(0),
+                         t.per_level, t.wr)
+        return t
+
+    def bad_return(t: Table) -> np.ndarray:  # (L,)
+        return t.read_pj.sum(axis=1)
+"""
+
+SH_EXPECTED = {
+    ("broadcast-mismatch", "bad_broadcast", Severity.ERROR),
+    ("rank-promotion", "bad_promotion", Severity.WARNING),
+    ("reduce-axis", "bad_reduce", Severity.ERROR),
+    ("bincount-mismatch", "bad_bincount", Severity.ERROR),
+    ("reshape-factor", "bad_reshape", Severity.ERROR),
+    ("ctor-shape", "bad_ctor", Severity.ERROR),
+    ("return-shape", "bad_return", Severity.WARNING),
+}
+
+
+def test_sh_fires_every_rule_on_its_fixture():
+    found = sh.check(_project(SH_BAD), modules=("fix.mod",))
+    got = {(f.rule, f.symbol, f.severity) for f in found}
+    assert SH_EXPECTED <= got, got
+    # the guard-pinned empty-table ctor is the sanctioned idiom: clean
+    assert not any(f.symbol == "good_ctor" for f in found)
+
+
+@settings(max_examples=20, deadline=None)
+@given(blanks=st.integers(min_value=0, max_value=40),
+       comment=st.sampled_from(["x", "reflowed", "NOTE: moved"]))
+def test_sh_verdicts_invariant_under_reformatting(blanks, comment):
+    """SH fingerprints hash messages/symbols, never line numbers, so
+    blank lines and comments must not change the verdict set."""
+    lines = textwrap.dedent(SH_BAD).splitlines()
+    out = [f"# {comment}"]
+    for i, line in enumerate(lines):
+        out.append(line)
+        if i == blanks % max(1, len(lines)):
+            out.extend([""] * (1 + blanks % 3))
+    baseline = {f.fingerprint
+                for f in sh.check(_project(SH_BAD), modules=("fix.mod",))}
+    assert baseline
+    moved = sh.check(_project("\n".join(out)), modules=("fix.mod",))
+    assert {f.fingerprint for f in moved} == baseline
+
+
+# --- MU: one bad fixture per rule ------------------------------------------
+
+MU_BAD = """
+    import numpy as np
+    from dataclasses import dataclass
+
+    @dataclass(frozen=True)
+    class Cols:
+        vals: np.ndarray    # (P,)
+
+    @dataclass(frozen=True)
+    class Rec:
+        row: np.ndarray     # (L,)
+
+    class Pricer:
+        def __init__(self):
+            self._tab: "Dict[str, Cols]" = {}
+            self._block = np.zeros((4, 4))
+
+        def get(self, key) -> Cols:
+            if key not in self._tab:
+                self._tab[key] = Cols(np.zeros(3))
+            return self._tab[key]
+
+        def raw(self):
+            return self._block
+
+        def pack(self):
+            return Rec(self._block[0])
+
+        def bad_mutate(self, key):
+            t = self._tab[key]
+            t.vals[0] = 1.0
+
+    def consumer(p: Pricer):
+        c = p.raw()
+        c[0, 0] = 3.0
+        return c
+"""
+
+MU_GOOD = """
+    import dataclasses
+    import numpy as np
+    from dataclasses import dataclass
+
+    def freeze_arrays(obj):
+        for f in dataclasses.fields(obj):
+            v = getattr(obj, f.name)
+            if isinstance(v, np.ndarray):
+                v.setflags(write=False)
+
+    @dataclass(frozen=True)
+    class Cols:
+        vals: np.ndarray    # (P,)
+
+        def __post_init__(self):
+            freeze_arrays(self)
+
+    class Pricer:
+        def __init__(self):
+            self._tab: "Dict[str, Cols]" = {}
+            self._block = np.zeros((4, 4))
+            self._block.setflags(write=False)
+
+        def get(self, key) -> Cols:
+            if key not in self._tab:
+                self._tab[key] = Cols(np.zeros(3))
+            return self._tab[key]
+
+        def raw(self):
+            return self._block
+"""
+
+
+def test_mu_fires_every_rule_on_its_fixture():
+    found = mu.check(_project(MU_BAD), cache_classes=("fix.mod.Pricer",))
+    got = {(f.rule, f.symbol, f.severity) for f in found}
+    assert ("cache-mutation", "Pricer.bad_mutate", Severity.ERROR) in got
+    assert ("cache-escape", "Pricer.get", Severity.WARNING) in got
+    assert ("cache-escape", "Pricer.raw", Severity.WARNING) in got
+    assert ("cache-escape", "Pricer.pack", Severity.WARNING) in got
+    assert ("escape-mutation", "consumer", Severity.ERROR) in got
+    # messages name the cache attribute so the fix target is obvious
+    assert any("_tab" in f.message for f in found
+               if f.symbol == "Pricer.bad_mutate")
+
+
+def test_mu_clean_when_caches_are_frozen():
+    """Both guarantees silence MU: a value class freezing its arrays in
+    __post_init__, and a raw attr frozen during the build phase."""
+    found = mu.check(_project(MU_GOOD), cache_classes=("fix.mod.Pricer",))
+    assert found == []
+
+
+# --- revert-the-fix regressions against the real repo ----------------------
+
+def test_sh_repo_clean_and_catches_reverted_empty_plan_bug():
+    """`columns.price` used to return (0, 0) columns for empty plans,
+    breaking every (P, L) aggregate as soon as the plan had real levels;
+    SH must be the checker that pins the fix."""
+    proj, src_root = _repo_project()
+    assert sh.check(proj) == []
+    path = src_root / "core" / "columns.py"
+    fixed = path.read_text()
+    assert "np.zeros((0, L))" in fixed      # the fix this PR made
+    proj.add_module(path, "repro.core.columns",
+                    source=fixed.replace("np.zeros((0, L))",
+                                         "np.zeros((0, 0))"))
+    found = sh.check(proj)
+    assert any(f.rule == "ctor-shape" and f.symbol == "price"
+               and f.severity == Severity.ERROR for f in found), \
+        [f.render() for f in found]
+
+
+def test_mu_repo_clean_and_catches_reverted_cache_freeze():
+    """Un-freezing the structural caches must re-surface the escape
+    findings on Evaluator's memoized tables and LatticePricer's
+    pre-gathered tech-stack block."""
+    proj, src_root = _repo_project()
+    assert mu.check(proj) == []
+    cols_path = src_root / "core" / "columns.py"
+    stream_path = src_root / "search" / "stream.py"
+    cols = cols_path.read_text()
+    stream = stream_path.read_text()
+    assert cols.count("freeze_arrays(self)") >= 5
+    assert "self._gstack.setflags(write=False)" in stream
+    proj.add_module(cols_path, "repro.core.columns",
+                    source=cols.replace("        freeze_arrays(self)",
+                                        "        pass"))
+    proj.add_module(stream_path, "repro.search.stream",
+                    source=stream.replace(
+                        "self._gstack.setflags(write=False)", "pass"))
+    found = mu.check(proj)
+    assert any(f.rule == "cache-escape" and f.symbol == "Evaluator.traffic"
+               for f in found), [f.render() for f in found]
+    assert any(f.rule == "cache-escape"
+               and f.symbol == "LatticePricer._plan"
+               and "_gstack" in f.message for f in found)
+
+
+# --- runtime half of the MU guarantee --------------------------------------
+
+def test_energy_table_columns_are_readonly():
+    """Mutating a cached-and-shared column must raise, not silently
+    corrupt every later reader of the same cache entry."""
+    spec = ConvLayerSpec("L", "conv", 8, 8, 3, 1, (16, 16))
+    base = get_arch("eyeriss", pe_config="v2")
+    tt = columns.TrafficTable.map_specs([spec], base)
+    point = DesignPoint(workload="w", arch="eyeriss", node=28,
+                        variant="sram", nvm="stt")
+    tab = energy.price_space([tt], [0], [point], ["stt"])
+    with pytest.raises(ValueError):
+        tab.read_pj[0, 0] = 1.0
+    with pytest.raises(ValueError):
+        tt.read_bits[0, 0] = 1.0
+    # derived properties still work — freezing is views-in, reads-out
+    assert np.all(np.isfinite(tab.total_pj))
+
+
+def test_freeze_arrays_marks_ndarray_fields_readonly():
+    @dataclasses.dataclass
+    class Box:
+        a: np.ndarray
+        b: float
+
+    box = Box(np.ones(3), 1.0)
+    columns.freeze_arrays(box)
+    assert not box.a.flags.writeable
+    with pytest.raises(ValueError):
+        box.a[0] = 2.0
+    assert box.b == 1.0
+
+
+# --- CLI: --only / --stats --------------------------------------------------
+
+def test_parse_only_validates_against_registry():
+    assert parse_only(None) == list(CHECKERS)
+    assert parse_only("sh, mu") == ["SH", "MU"]
+    with pytest.raises(ValueError):
+        parse_only("CK,XX")
+    with pytest.raises(ValueError):
+        run_analysis(only=["XX"])
+
+
+def test_cli_only_and_stats(capsys):
+    assert main(["--only", "SH,MU", "--stats"]) == 0
+    out = capsys.readouterr().out
+    assert "checker" in out and "all" in out    # the stats table
+    assert main(["--only", "NOPE"]) == 2
+    assert "unknown checker" in capsys.readouterr().err
+
+
+def test_only_subset_runs_only_those_checkers():
+    findings = run_analysis(only=["PO"])
+    assert all(f.checker == "PO" for f in findings)

@@ -170,7 +170,7 @@ def test_power_curves_match_scalar_including_weight_class():
     rs = ev.evaluate(space)
     ips_grid = np.logspace(-2, 2, 9)
     power = nvm_mod.memory_power_curves(table, ips_grid)
-    for i, (p, r) in enumerate(rs):
+    for i, (_p, r) in enumerate(rs):
         curve = nvm_mod.memory_power_curve(r, ips_grid)   # one-report path
         for g, ips in enumerate(ips_grid):
             ips = float(ips)

@@ -187,7 +187,7 @@ def test_quant_space_scalar_columnar_row_identical():
     space = xp.SWEEPS["quant"].space(lm_archs=("llama3.2-1b",))
     table = xp.Evaluator().evaluate_table(space)
     scalar = xp.Evaluator().evaluate(space, batched=False)
-    for i, (p, r) in enumerate(scalar):
+    for i, (_p, r) in enumerate(scalar):
         for attr in ("total_pj", "mem_pj", "latency_s", "edp"):
             assert math.isclose(float(table.column(attr)[i]),
                                 float(getattr(r, attr)),
@@ -363,7 +363,7 @@ def test_lm_kv_rows_emit_actual_savings_ips():
     # the emitted rate is really min(10, max_ips) of the matching point
     pts = list(space)
     mram = [p for p in pts if p.variant != "sram"]
-    for r, p, i in zip(rows, mram,
+    for r, _p, i in zip(rows, mram,
                        [i for i, q in enumerate(pts) if q.variant != "sram"]):
         assert r["savings_ips"] == pytest.approx(
             min(10.0, float(table.max_ips[i])), rel=1e-12)

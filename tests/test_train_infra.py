@@ -114,7 +114,7 @@ def test_compress_error_feedback_unbiased():
     err = compress.init_error({"g": jnp.zeros(64)})
     total_true = np.zeros(64)
     total_sent = np.zeros(64)
-    for i in range(20):
+    for _ in range(20):
         g = {"g": jnp.asarray(rng.normal(size=64), jnp.float32)}
         total_true += np.asarray(g["g"])
         q, s, err = compress.compress(g, err)

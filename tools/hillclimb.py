@@ -25,6 +25,7 @@ placement) to minimize feasible system memory power.
 """
 import argparse
 import collections
+import contextlib
 import dataclasses
 import os
 import sys
@@ -39,10 +40,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def parse_override(s):
     k, v = s.split("=", 1)
-    try:
+    with contextlib.suppress(Exception):
         v = eval(v, {}, {})
-    except Exception:
-        pass
     return k, v
 
 
